@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks. On this CPU container, Pallas runs in interpret
+mode — wall numbers are NOT TPU times; they are regression/correctness
+tracking. The derived column reports max|err| vs the jnp oracle."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_ref, ssd_ref
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _t(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def main(emit=print):
+    emit("name,us_per_call,derived")
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    t = _t(lambda: flash_attention(q, k, v, block_q=128, block_k=128))
+    err = np.max(np.abs(np.asarray(flash_attention(q, k, v)) -
+                        np.asarray(attention_ref(q, k, v))))
+    emit(f"flash_attention_256x4h64d_interp,{t*1e6:.0f},max_err={err:.2e}")
+
+    qd = jax.random.normal(ks[0], (2, 1, 8, 128))
+    kd = jax.random.normal(ks[1], (2, 2048, 2, 128))
+    vd = jax.random.normal(ks[2], (2, 2048, 2, 128))
+    t = _t(lambda: decode_attention(qd, kd, vd, q_offset=2000, kv_len=2001))
+    err = np.max(np.abs(np.asarray(decode_attention(qd, kd, vd, q_offset=2000, kv_len=2001)) -
+                        np.asarray(attention_ref(qd, kd, vd, causal=False, q_offset=2000, kv_len=2001))))
+    emit(f"decode_attention_2048kv_interp,{t*1e6:.0f},max_err={err:.2e}")
+
+    x = jax.random.normal(ks[0], (1, 512, 4, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 512, 4)))
+    A = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (1, 512, 64))
+    Cm = jax.random.normal(ks[4], (1, 512, 64))
+    t = _t(lambda: ssd_scan(x, dt * A, dt, Bm, Cm, chunk=128), reps=1)
+    y, h = ssd_scan(x, dt * A, dt, Bm, Cm, chunk=128)
+    yr, hr = ssd_ref(x, dt * A, dt, Bm, Cm)
+    err = np.max(np.abs(np.asarray(y) - np.asarray(yr)))
+    emit(f"ssd_scan_512x4h_interp,{t*1e6:.0f},max_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Partitioner benchmark: DP planning cost vs model depth, and the paper's
+incremental re-partitioning speedup (Challenge #2 — fast adaptation)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import DeviceSim, build_transformer_graph, build_yolo_graph
+from repro.core.partitioner import dp_partition, incremental_repartition
+
+
+def _time(fn, reps=3):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def main(emit=print):
+    emit("name,us_per_call,derived")
+    sim = DeviceSim("moderate", seed=0)
+
+    def cost(op, a, p):
+        return sim.exec_op(op, a, p)
+
+    graphs = {
+        "yolo(9ops)": build_yolo_graph(),
+        "tinyllama(67ops)": build_transformer_graph(get_config("tinyllama-1.1b"), 1, 2048),
+        "kimi(124ops)": build_transformer_graph(get_config("kimi-k2-1t-a32b"), 1, 2048),
+        "mamba2(130ops)": build_transformer_graph(get_config("mamba2-2.7b"), 1, 2048),
+    }
+    for name, g in graphs.items():
+        t_full = _time(lambda: dp_partition(g, cost, lam=1.0))
+        emit(f"dp_full_{name},{t_full*1e6:.0f},ops={len(g)}")
+        plan = dp_partition(g, cost, lam=1.0)
+        seg = (len(g) // 3, len(g) // 3 + max(2, len(g) // 10))
+        t_inc = _time(lambda: incremental_repartition(g, plan, cost, seg, lam=1.0))
+        emit(f"dp_incremental_{name},{t_inc*1e6:.0f},"
+             f"segment={seg[1]-seg[0]+1}ops;speedup_vs_full={t_full/max(t_inc,1e-9):.2f}x")
+        t_edp = _time(lambda: dp_partition(g, cost, objective='edp'), reps=1)
+        emit(f"dp_edp_sweep_{name},{t_edp*1e6:.0f},lambda_sweep=13")
+
+
+if __name__ == "__main__":
+    main()

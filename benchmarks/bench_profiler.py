@@ -1,0 +1,50 @@
+"""Profiler-accuracy benchmark: GBDT-only vs GBDT+GRU under device drift
+(the paper's Challenge #1 — runtime energy feedback quality)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DeviceSim, RuntimeEnergyProfiler, build_yolo_graph
+
+
+def run(workload="high", n_feedback=160, seed=0):
+    """LATENT drift scenario (paper Challenge #1): a sustained workload heats
+    the die; the thermal state is invisible to the resource monitor, so the
+    offline GBDT cannot model it — only the GRU's energy-feedback loop can."""
+    g = build_yolo_graph()
+    variants = {}
+    for name, use_gru in (("gbdt", False), ("gbdt+gru", True)):
+        prof = RuntimeEnergyProfiler(use_gru=use_gru, seed=seed)
+        prof.offline_calibrate([g], n_samples=2500, seed=seed)
+        sim = DeviceSim(workload, seed=seed + 1)
+        sim._therm = 1.0  # sustained-load hot device
+        for it in range(n_feedback):
+            op = g.nodes[it % len(g.nodes)]
+            obs = sim.observe()
+            lat, en = sim.exec_op(op, 1.0, 1.0)
+            prof.feedback(op, 1.0, 1.0, obs, lat, en)
+            sim.step(active=1.0)
+            sim._therm = max(sim._therm, 0.95)
+        errs = []
+        obs = sim.observe()
+        for op in g.nodes:
+            for a in (0.5, 1.0):
+                _, t = sim.exec_op(op, a, a)
+                _, p = prof.predict(op, a, a, obs)
+                errs.append(abs(p - t) / t)
+        variants[name] = float(np.median(errs))
+    return variants
+
+
+def main(emit=print):
+    emit("name,us_per_call,derived")
+    for workload in ("moderate", "high"):
+        v = run(workload)
+        emit(f"profiler_{workload}_gbdt_err,,median_rel_err={v['gbdt']:.4f}")
+        emit(f"profiler_{workload}_gbdt_gru_err,,median_rel_err={v['gbdt+gru']:.4f}")
+        emit(f"profiler_{workload}_gru_improvement,,pct={100*(1-v['gbdt+gru']/max(v['gbdt'],1e-9)):.1f}")
+    return v
+
+
+if __name__ == "__main__":
+    main()

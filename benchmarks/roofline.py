@@ -1,0 +1,117 @@
+"""Roofline analysis (deliverable g): derive the three terms per
+(arch x shape) from the dry-run JSON dumps.
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s          (197 TF bf16, v5e)
+  memory     = HLO_bytes_per_chip / HBM_bw               (819 GB/s)
+  collective = collective_bytes_per_chip / link_bw       (~50 GB/s/link ICI)
+
+FLOPs/bytes are the loop-aware (trip-count-corrected) numbers from
+utils/hlo_cost.py; the dry-run HLO module is per-device, so terms are
+already per-chip. MODEL_FLOPS = 6*N_active*tokens (train) or
+2*N_active*tokens (inference) — the useful-compute yardstick.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    s = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if s.kind == "train":
+        return 6.0 * n * s.global_batch * s.seq_len
+    tokens = s.global_batch * (s.seq_len if s.kind == "prefill" else 1)
+    return 2.0 * n * tokens
+
+
+def suggestion(row) -> str:
+    dom = row["dominant"]
+    if dom == "collective":
+        kinds = row.get("collectives", {})
+        big = max(kinds, key=lambda k: kinds[k]["bytes"]) if kinds else "all-reduce"
+        return (f"cut {big} traffic: narrower TP for this layer class / "
+                "overlap collectives with compute / keep weights resident (no per-step FSDP gather)")
+    if dom == "memory":
+        return "raise arithmetic intensity: larger per-chip batch, fuse elementwise chains, bf16 cache"
+    return "compute-bound (good); push MXU utilisation via 128-aligned tiles and fewer remat passes"
+
+
+def load_rows(dry_dir="results/dryrun", mesh="pod16x16", tag=""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, f"*__{mesh}{('__'+tag) if tag else ''}.json"))):
+        d = json.load(open(path))
+        if tag == "" and d.get("tag"):
+            continue
+        if d.get("status") == "skipped":
+            rows.append({"arch": d["arch"], "shape": d["shape"], "status": "skipped",
+                         "note": d.get("note", "")})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"arch": d["arch"], "shape": d["shape"], "status": "FAIL",
+                         "note": d.get("error", "")})
+            continue
+        t_c = d["flops"] / PEAK_FLOPS
+        t_m = d["bytes_accessed"] / HBM_BW
+        t_x = d["collective_bytes"] / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops(d["arch"], d["shape"])
+        hlo_total = d["flops"] * d["n_devices"]
+        row = {
+            "arch": d["arch"], "shape": d["shape"], "status": "ok",
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom,
+            "model_flops": mf,
+            "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+            "collectives": d.get("collectives", {}),
+            "note": d.get("note", ""),
+            "bytes_per_dev": d.get("argument_size_in_bytes", 0),
+            "temp_bytes": d.get("temp_size_in_bytes", 0),
+        }
+        row["suggestion"] = suggestion(row)
+        rows.append(row)
+    return rows
+
+
+def render_markdown(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | useful (6ND/HLO) | next move |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | {r['status']} | - | {r['note'][:80]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['suggestion'][:90]} |")
+    return "\n".join(out)
+
+
+def main(emit=print):
+    emit("name,us_per_call,derived")
+    rows = load_rows()
+    for r in rows:
+        if r["status"] != "ok":
+            emit(f"roofline_{r['arch']}_{r['shape']},,{r['status']}")
+            continue
+        step_s = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline_{r['arch']}_{r['shape']},{step_s*1e6:.0f},"
+             f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};"
+             f"tc={r['t_compute_s']:.3e};tm={r['t_memory_s']:.3e};tx={r['t_collective_s']:.3e}")
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write(render_markdown(rows) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

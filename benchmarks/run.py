@@ -1,0 +1,46 @@
+"""Benchmark entry point: one section per paper table/figure + system extras.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig2,profiler,partitioner,kernels,roofline]``
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="fig2,profiler,partitioner,kernels,roofline")
+    args = ap.parse_args()
+    sections = set(args.only.split(","))
+    t0 = time.time()
+
+    def banner(s):
+        print(f"# ---- {s} ----", flush=True)
+
+    if "fig2" in sections:
+        banner("Fig.2: MACE-GPU vs CoDL vs AdaOper (latency + energy)")
+        from benchmarks import bench_concurrent
+        bench_concurrent.main()
+    if "profiler" in sections:
+        banner("Profiler accuracy: GBDT vs GBDT+GRU under drift")
+        from benchmarks import bench_profiler
+        bench_profiler.main()
+    if "partitioner" in sections:
+        banner("Partitioner: DP cost + incremental re-partition speedup")
+        from benchmarks import bench_partitioner
+        bench_partitioner.main()
+    if "kernels" in sections:
+        banner("Pallas kernels (interpret-mode regression)")
+        from benchmarks import bench_kernels
+        bench_kernels.main()
+    if "roofline" in sections:
+        banner("Roofline terms from dry-run artifacts")
+        from benchmarks import roofline
+        roofline.main()
+    print(f"# total {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""AdaOper core: runtime energy profiler + energy-aware operator partitioner."""
+from repro.core.baselines import codl_plan, mace_gpu_plan  # noqa: F401
+from repro.core.controller import AdaOperController  # noqa: F401
+from repro.core.gbdt import GBDTRegressor  # noqa: F401
+from repro.core.gru import GRUCorrector  # noqa: F401
+from repro.core.opgraph import OpGraph, OpNode, build_transformer_graph, build_yolo_graph  # noqa: F401
+from repro.core.partitioner import (  # noqa: F401
+    ALPHA_LEVELS,
+    PartitionPlan,
+    dp_partition,
+    incremental_repartition,
+)
+from repro.core.profiler import RuntimeEnergyProfiler, op_features  # noqa: F401
+from repro.core.simulator import CPU, GPU, PRESETS, DeviceSim, DeviceState  # noqa: F401

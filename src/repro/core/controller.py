@@ -1,0 +1,123 @@
+"""AdaOper runtime controller: profiler + partitioner closed loop.
+
+Drives concurrent DNN tasks on the device simulator:
+  1. plan each task's operator partitioning from profiler predictions
+     under the *observed* device state,
+  2. execute (ground-truth physics), feed energy/latency back to the
+     profiler (GRU online refinement),
+  3. detect per-segment energy drift and trigger INCREMENTAL re-partition
+     of the drifted operator segments (not the whole model),
+  4. periodically (or on large drift) re-plan fully.
+
+This is the module the paper-reproduction benchmark drives; the serving
+engine reuses it for pod-level concurrent scheduling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.opgraph import OpGraph
+from repro.core.partitioner import PartitionPlan, dp_partition, incremental_repartition
+from repro.core.profiler import RuntimeEnergyProfiler
+from repro.core.simulator import DeviceSim
+
+
+@dataclass
+class TaskStats:
+    latencies: List[float] = field(default_factory=list)
+    energies: List[float] = field(default_factory=list)
+    repartitions: int = 0
+    incremental: int = 0
+
+    def totals(self) -> Tuple[float, float]:
+        return float(np.sum(self.latencies)), float(np.sum(self.energies))
+
+
+class AdaOperController:
+    def __init__(self, sim: DeviceSim, profiler: RuntimeEnergyProfiler,
+                 objective: str = "edp", drift_threshold: float = 0.35,
+                 replan_period: int = 16, segment_halo: int = 2):
+        self.sim = sim
+        self.profiler = profiler
+        self.objective = objective
+        self.drift_threshold = drift_threshold
+        self.replan_period = replan_period
+        self.segment_halo = segment_halo
+        self.plans: Dict[str, PartitionPlan] = {}
+        self.stats: Dict[str, TaskStats] = {}
+
+    def _cost_fn(self, obs_state):
+        return self.profiler.cost_fn(obs_state)
+
+    def plan(self, graph: OpGraph) -> PartitionPlan:
+        obs = self.sim.observe()
+        plan = dp_partition(graph, self._cost_fn(obs), objective=self.objective)
+        self.plans[graph.name] = plan
+        self.stats.setdefault(graph.name, TaskStats()).repartitions += 1
+        return plan
+
+    def run_inference(self, graph: OpGraph) -> Tuple[float, float]:
+        """One inference of `graph` under its current plan, with feedback and
+        drift-triggered incremental re-partitioning."""
+        if graph.name not in self.plans:
+            self.plan(graph)
+        plan = self.plans[graph.name]
+        stats = self.stats[graph.name]
+        obs = self.sim.observe()
+        lat = en = 0.0
+        prev = plan.alphas[0]
+        items, lats, ens = [], [], []
+        for i, (op, a) in enumerate(zip(graph.nodes, plan.alphas)):
+            l, e = self.sim.exec_op(op, float(a), float(prev))
+            items.append((op, float(a), float(prev)))
+            lats.append(l)
+            ens.append(e)
+            lat += l
+            en += e
+            prev = a
+            self.sim.step(l)
+        drifts = self.profiler.feedback_batch(items, obs, lats, ens)
+        drifted = [i for i, d in enumerate(drifts) if d > self.drift_threshold]
+        stats.latencies.append(lat)
+        stats.energies.append(en)
+        # incremental re-partition of drifted segments (merged + halo)
+        if drifted:
+            obs2 = self.sim.observe()
+            segs = self._merge_segments(drifted, len(graph))
+            new_plan = plan
+            for lo, hi in segs:
+                new_plan = incremental_repartition(
+                    graph, new_plan, self._cost_fn(obs2), (lo, hi),
+                    objective=self.objective,
+                    lam=self._lam_estimate(new_plan))
+                stats.incremental += 1
+            self.plans[graph.name] = new_plan
+        n = len(stats.latencies)
+        if n % self.replan_period == 0:
+            self.plan(graph)
+        return lat, en
+
+    def _lam_estimate(self, plan: PartitionPlan) -> float:
+        return plan.pred_energy / max(plan.pred_latency, 1e-9)
+
+    def _merge_segments(self, idxs: List[int], n: int) -> List[Tuple[int, int]]:
+        h = self.segment_halo
+        segs: List[Tuple[int, int]] = []
+        for i in idxs:
+            lo, hi = max(0, i - h), min(n - 1, i + h)
+            if segs and lo <= segs[-1][1] + 1:
+                segs[-1] = (segs[-1][0], hi)
+            else:
+                segs.append((lo, hi))
+        return segs
+
+    # ----- concurrent workload driver -----
+    def run_concurrent(self, graphs: List[OpGraph], iters: int = 50):
+        """Round-robin concurrent inference (paper's concurrent-DNN setting)."""
+        for it in range(iters):
+            for g in graphs:
+                self.run_inference(g)
+        return {g.name: self.stats[g.name] for g in graphs}

@@ -1,0 +1,130 @@
+"""GRU online corrector (JAX).
+
+AdaOper's runtime refinement: a small GRU consumes the recent window of
+(op/device features, GBDT prediction, observed energy) tuples and predicts a
+multiplicative correction for the next prediction, tracking drift that the
+offline GBDT cannot see (thermal throttling, governor moves, contention).
+Trained online with Adam on a sliding replay buffer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_gru_params(rng, in_dim: int, hidden: int = 32):
+    k = jax.random.split(rng, 4)
+    s = 1.0 / np.sqrt(in_dim + hidden)
+    return {
+        "wz": jax.random.normal(k[0], (in_dim + hidden, hidden)) * s,
+        "wr": jax.random.normal(k[1], (in_dim + hidden, hidden)) * s,
+        "wh": jax.random.normal(k[2], (in_dim + hidden, hidden)) * s,
+        "bz": jnp.zeros((hidden,)), "br": jnp.zeros((hidden,)), "bh": jnp.zeros((hidden,)),
+        # zero-init head: the corrector starts as the identity (correction 0)
+        # and only departs from it as online evidence accumulates
+        "wo": jnp.zeros((hidden, 1)),
+        "bo": jnp.zeros((1,)),
+    }
+
+
+def gru_apply(params, xs):
+    """xs (T, in_dim) -> scalar log-correction prediction for step T."""
+
+    def cell(h, x):
+        hx = jnp.concatenate([x, h])
+        z = jax.nn.sigmoid(hx @ params["wz"] + params["bz"])
+        r = jax.nn.sigmoid(hx @ params["wr"] + params["br"])
+        hh = jnp.tanh(jnp.concatenate([x, r * h]) @ params["wh"] + params["bh"])
+        h_new = (1 - z) * h + z * hh
+        return h_new, h_new
+
+    h0 = jnp.zeros((params["bz"].shape[0],))
+    h_last, _ = jax.lax.scan(cell, h0, xs)
+    return (h_last @ params["wo"] + params["bo"])[0]
+
+
+def _loss(params, xs_batch, y_batch):
+    preds = jax.vmap(lambda xs: gru_apply(params, xs))(xs_batch)
+    return jnp.mean((preds - y_batch) ** 2)
+
+
+@partial(jax.jit, static_argnames=())
+def _adam_step(params, opt_m, opt_v, t, xs_batch, y_batch, lr):
+    g = jax.grad(_loss)(params, xs_batch, y_batch)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    opt_m = jax.tree.map(lambda m, gr: b1 * m + (1 - b1) * gr, opt_m, g)
+    opt_v = jax.tree.map(lambda v, gr: b2 * v + (1 - b2) * gr * gr, opt_v, g)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), opt_m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), opt_v)
+    params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return params, opt_m, opt_v
+
+
+@dataclass
+class GRUCorrector:
+    in_dim: int
+    window: int = 8
+    hidden: int = 32
+    lr: float = 3e-3
+    buffer_size: int = 256
+    seed: int = 0
+
+    def __post_init__(self):
+        self.params = init_gru_params(jax.random.PRNGKey(self.seed), self.in_dim, self.hidden)
+        self.opt_m = jax.tree.map(jnp.zeros_like, self.params)
+        self.opt_v = jax.tree.map(jnp.zeros_like, self.params)
+        self.t = 0
+        self._buf_x: list = []
+        self._buf_y: list = []
+        self._hist: list = []
+        self._apply = jax.jit(gru_apply)
+
+    # ----- online API -----
+    def predict_correction(self) -> float:
+        """log-space correction to apply to the next GBDT prediction.
+        Memoised on (history length, train step) — partitioner cost sweeps
+        call this thousands of times between feedback events."""
+        if len(self._hist) < 2:
+            return 0.0
+        key = (len(self._hist), self.t)
+        if getattr(self, "_corr_key", None) == key:
+            return self._corr_val
+        xs = np.stack(self._hist[-self.window:], 0)
+        if xs.shape[0] < self.window:
+            xs = np.pad(xs, ((self.window - xs.shape[0], 0), (0, 0)))
+        self._corr_key = key
+        self._corr_val = float(self._apply(self.params, jnp.asarray(xs, jnp.float32)))
+        return self._corr_val
+
+    def record(self, features: np.ndarray, gbdt_pred: float, observed: float):
+        """Feed one (features, prediction, observation) feedback tuple.
+        The log-ratio is clipped: a degenerate GBDT prediction (~0 on a tiny
+        op) must not inject a +25 outlier into the training buffer."""
+        ratio = float(np.clip(
+            np.log(max(observed, 1e-12) / max(gbdt_pred, 1e-12)), -2.0, 2.0))
+        x = np.concatenate([features, [np.log1p(max(gbdt_pred, 0)) , ratio]]).astype(np.float32)
+        self._hist.append(x)
+        if len(self._hist) >= self.window + 1:
+            xs = np.stack(self._hist[-self.window - 1 : -1], 0)
+            self._buf_x.append(xs)
+            self._buf_y.append(ratio)
+            if len(self._buf_x) > self.buffer_size:
+                self._buf_x.pop(0)
+                self._buf_y.pop(0)
+
+    def train_steps(self, n: int = 4, batch: int = 32):
+        if len(self._buf_x) < 8:
+            return
+        rng = np.random.default_rng(self.t)
+        for _ in range(n):
+            idx = rng.integers(0, len(self._buf_x), min(batch, len(self._buf_x)))
+            xs = jnp.asarray(np.stack([self._buf_x[i] for i in idx]), jnp.float32)
+            ys = jnp.asarray(np.array([self._buf_y[i] for i in idx]), jnp.float32)
+            self.t += 1
+            self.params, self.opt_m, self.opt_v = _adam_step(
+                self.params, self.opt_m, self.opt_v, float(self.t), xs, ys, self.lr)

@@ -1,0 +1,160 @@
+"""Runtime energy profiler — AdaOper module #1.
+
+Offline: GBDT regressors (energy + latency) fit on calibration traces
+sampled across device states, operators and partition ratios.
+Online: a resource monitor reads (noisy) device state; a GRU consumes the
+recent feedback window and predicts a log-space correction to the GBDT
+energy estimate, tracking dynamics the offline model cannot (governor
+moves, thermal, contention bursts).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.gbdt import GBDTRegressor
+from repro.core.gru import GRUCorrector
+from repro.core.opgraph import OP_TYPES, OpGraph, OpNode
+from repro.core.simulator import DeviceSim, DeviceState, PRESETS
+
+
+def op_features(op: OpNode, alpha: float, prev_alpha: float, state: DeviceState) -> np.ndarray:
+    onehot = np.zeros(len(OP_TYPES))
+    onehot[OP_TYPES.index(op.op_type)] = 1.0
+    return np.concatenate([
+        [np.log1p(op.flops) / 25.0,
+         np.log1p(op.bytes_in + op.bytes_out) / 25.0,
+         np.log1p(op.weight_bytes) / 25.0,
+         alpha,
+         1.0 if 0.0 < alpha < 1.0 else 0.0,
+         abs(alpha - prev_alpha)],
+        onehot,
+        state.as_features(),
+    ])
+
+
+FEATURE_DIM = 6 + len(OP_TYPES) + 4
+
+
+class RuntimeEnergyProfiler:
+    def __init__(self, seed: int = 0, use_gru: bool = True):
+        self.energy_model = GBDTRegressor(seed=seed)
+        self.latency_model = GBDTRegressor(seed=seed + 1)
+        self.use_gru = use_gru
+        # GRU input = features + [log gbdt pred, log ratio] (built in record())
+        self.gru_e = GRUCorrector(in_dim=FEATURE_DIM + 2, seed=seed)
+        self.gru_t = GRUCorrector(in_dim=FEATURE_DIM + 2, seed=seed + 1)
+        self._calibrated = False
+        self._n_feedback = 0
+
+    # ------------------------------------------------------------------
+    # offline calibration (factory/first-run energy benchmarking pass)
+    # ------------------------------------------------------------------
+    def offline_calibrate(self, graphs, n_samples: int = 4000, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        X, ye, yt = [], [], []
+        presets = list(PRESETS)
+        ops = [op for g in graphs for op in g.nodes]
+        for i in range(n_samples):
+            sim = DeviceSim(presets[rng.integers(len(presets))], seed=int(rng.integers(1 << 30)))
+            for _ in range(int(rng.integers(0, 8))):
+                sim.step()
+            op = ops[rng.integers(len(ops))]
+            alpha = float(rng.choice([0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0])) \
+                if op.splittable else float(rng.integers(2))
+            prev = float(rng.choice([0, 0.5, 1.0]))
+            lat, en = sim.exec_op(op, alpha, prev)
+            X.append(op_features(op, alpha, prev, sim.state))
+            ye.append(en)
+            yt.append(lat)
+        X = np.stack(X)
+        self.energy_model.fit(X, np.array(ye))
+        self.latency_model.fit(X, np.array(yt))
+        self._calibrated = True
+        return self
+
+    # ------------------------------------------------------------------
+    # runtime prediction + feedback
+    # ------------------------------------------------------------------
+    def _corrections(self) -> Tuple[float, float]:
+        if not self.use_gru:
+            return 1.0, 1.0
+        return (float(np.exp(np.clip(self.gru_e.predict_correction(), -1.5, 1.5))),
+                float(np.exp(np.clip(self.gru_t.predict_correction(), -1.5, 1.5))))
+
+    def predict(self, op: OpNode, alpha: float, prev_alpha: float,
+                obs_state: DeviceState) -> Tuple[float, float]:
+        """Returns (latency_s, energy_j) prediction under observed state."""
+        x = op_features(op, alpha, prev_alpha, obs_state)[None]
+        ce, ct = self._corrections()
+        en = float(self.energy_model.predict(x)[0]) * ce
+        lat = float(self.latency_model.predict(x)[0]) * ct
+        return max(lat, 1e-9), max(en, 1e-12)
+
+    def predict_batch(self, items, obs_state):
+        """items: list of (op, alpha, prev_alpha). One vectorised GBDT pass —
+        the partitioner's DP tables evaluate ~1e3 placements per plan."""
+        X = np.stack([op_features(op, a, p, obs_state) for op, a, p in items])
+        ce, ct = self._corrections()
+        en = np.maximum(self.energy_model.predict(X) * ce, 1e-12)
+        lat = np.maximum(self.latency_model.predict(X) * ct, 1e-9)
+        return lat, en
+
+    def cost_fn(self, obs_state):
+        """Batched cost callable for the DP partitioner."""
+        prof = self
+
+        class _Fn:
+            def __call__(self, op, a, p):
+                return prof.predict(op, a, p, obs_state)
+
+            def batch(self, items):
+                return prof.predict_batch(items, obs_state)
+
+        return _Fn()
+
+    def predict_graph(self, graph: OpGraph, plan, obs_state) -> Tuple[float, float]:
+        lat = en = 0.0
+        prev = plan[0] if len(plan) else 1.0
+        for op, a in zip(graph.nodes, plan):
+            l, e = self.predict(op, float(a), float(prev), obs_state)
+            lat += l
+            en += e
+            prev = a
+        return lat, en
+
+    def feedback(self, op: OpNode, alpha: float, prev_alpha: float,
+                 obs_state: DeviceState, observed_lat: float, observed_en: float):
+        x = op_features(op, alpha, prev_alpha, obs_state)
+        gb_e = float(self.energy_model.predict(x[None])[0])
+        gb_t = float(self.latency_model.predict(x[None])[0])
+        self._record(x, gb_e, gb_t, observed_lat, observed_en)
+
+    def _record(self, x, gb_e, gb_t, observed_lat, observed_en):
+        if self.use_gru:
+            self.gru_e.record(x, gb_e, observed_en)
+            self.gru_t.record(x, gb_t, observed_lat)
+            self._n_feedback += 1
+            if self._n_feedback % 8 == 0:
+                self.gru_e.train_steps(6)
+                self.gru_t.train_steps(6)
+
+    def feedback_batch(self, items, obs_state, observed_lats, observed_ens):
+        """Vectorised per-inference feedback + drift computation.
+        Returns per-op relative energy drift (the re-partition trigger)."""
+        X = np.stack([op_features(op, a, p, obs_state) for op, a, p in items])
+        gb_e = self.energy_model.predict(X)
+        gb_t = self.latency_model.predict(X)
+        ce, ct = self._corrections()
+        drift = np.abs(np.asarray(observed_ens) - gb_e * ce) / np.maximum(gb_e * ce, 1e-12)
+        for j in range(len(items)):
+            self._record(X[j], float(gb_e[j]), float(gb_t[j]),
+                         float(observed_lats[j]), float(observed_ens[j]))
+        return drift
+
+    def drift(self, op, alpha, prev_alpha, obs_state, observed_en) -> float:
+        """Relative energy prediction error — the re-partition trigger."""
+        _, pred = self.predict(op, alpha, prev_alpha, obs_state)
+        return abs(observed_en - pred) / max(pred, 1e-12)

@@ -1,0 +1,21 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``repro.models.attention.attend(impl="pallas")`` routes here. On CPU the
+kernels run in interpret mode (correctness validation); on TPU they compile
+natively. ``flash_attention`` dispatches to the flash-decode kernel when
+q_len == 1.
+"""
+from __future__ import annotations
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    q_offset=0, kv_len=None, scale=None):
+    if q.shape[1] == 1:
+        return decode_attention(q, k, v, q_offset=q_offset, kv_len=kv_len,
+                                window=window, softcap=softcap, scale=scale)
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  q_offset=q_offset, kv_len=kv_len, scale=scale)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` of the brief).
+
+Written as the mathematical definition (materialised scores / sequential
+recurrence), independent of the blockwise implementations in
+``repro.models.attention`` / ``repro.models.ssm``, so kernel tests compare
+against first principles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  q_offset=0, kv_len=None, scale=None):
+    """q (B,Sq,H,Dk); k/v (B,Sk,Hkv,D*). Materialised-scores definition."""
+    B, Sq, H, Dk = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else Dk ** -0.5
+    kx = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vx = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    keep = jnp.ones((Sq, Sk), bool)
+    if causal:
+        keep &= kpos <= qpos
+    if window is not None:
+        keep &= (qpos - kpos) < window
+    if kv_len is not None:
+        keep &= kpos < kv_len
+    s = jnp.where(keep[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+    return o.astype(q.dtype)
+
+
+def ssd_ref(x, dA, dt, Bm, Cm):
+    """Sequential SSD recurrence (the definition).
+
+    x (B,S,H,P); dA (B,S,H) log-decay (=dt*A); dt (B,S,H); Bm/Cm (B,S,N).
+    h_t = exp(dA_t) h_{t-1} + dt_t * B_t (x) x_t ; y_t = C_t . h_t
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dat, dtt, bt, ct = inp
+        h = h * jnp.exp(dat)[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dA.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h

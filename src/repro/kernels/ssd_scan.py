@@ -1,0 +1,101 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm: the GPU implementation leans on warp
+shuffles for the intra-chunk cumulative decays; here everything is cast as
+dense MXU work — the intra-chunk term is a (Q x Q) masked "attention"
+matmul and the inter-chunk state is a (N x Q)(Q x P) matmul, with the
+running state (P x N) carried in VMEM scratch across the sequential chunk
+grid dimension. Q = chunk length is the MXU tile knob.
+
+Inputs: x (B,S,H,P), dA (B,S,H) log-decays, dt (B,S,H), Bm/Cm (B,S,N).
+Outputs: y (B,S,H,P), final state (B,H,P,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, da_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref, state_ref,
+                *, chunk, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q,P)
+    da = da_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    bm = b_ref[0, :, :].astype(jnp.float32)  # (Q,N)
+    cm = c_ref[0, :, :].astype(jnp.float32)  # (Q,N)
+
+    cum = jnp.cumsum(da)  # (Q,)
+    # intra-chunk: M[i,j] = exp(cum_i - cum_j) (i>=j) * (C_i.B_j) * dt_j
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # (Q,Q)
+    M = cb * L * dt[None, :]
+    y = jax.lax.dot(M, x)  # (Q,P)
+
+    # inter-chunk: y += exp(cum_i) * C_i . h_in ; h_in (P,N)
+    h = state_ref[...]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(cm, h, (((1,), (1,)), ((), ())))
+
+    # state update: h_out = exp(cum_Q) h_in + sum_j exp(cum_Q - cum_j) dt_j x_j B_j^T
+    w = jnp.exp(cum[-1] - cum) * dt  # (Q,)
+    upd = jax.lax.dot_general(x * w[:, None], bm, (((0,), (0,)), ((), ())))  # (P,N)
+    state_ref[...] = jnp.exp(cum[-1]) * h + upd
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        hout_ref[0, 0, :, :] = state_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dA, dt, Bm, Cm, *, chunk=128, interpret=None):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q, nc=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc * Q, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dA, dt, Bm, Cm)
+    return y[:, :S], hout

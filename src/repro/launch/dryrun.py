@@ -1,0 +1,243 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, with no real device allocation (ShapeDtypeStruct stand-ins).
+
+MUST set the placeholder-device flag before any other import — jax locks the
+device count on first init.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import ARCHS, SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import batch_axes_for, make_production_mesh  # noqa: E402
+from repro.models import model as model_lib  # noqa: E402
+from repro.sharding.context import ExecContext  # noqa: E402
+from repro.sharding.partition_specs import (  # noqa: E402
+    batch_shardings,
+    cache_shardings,
+    params_shardings,
+)
+from repro.training.optimizer import init_opt_state  # noqa: E402
+from repro.training.train_loop import make_train_step  # noqa: E402
+from repro.utils.hlo_cost import loop_aware_cost  # noqa: E402
+from repro.utils.hlo_stats import collective_stats  # noqa: E402
+
+ENC_FRAMES = 512  # audio frontend stub: precomputed frames fed to the encoder
+
+
+def config_for_shape(cfg, shape_name):
+    """Returns (cfg', note) — cfg'=None means the pair is skipped (DESIGN.md)."""
+    if shape_name != "long_500k":
+        return cfg, ""
+    if cfg.family == "audio":
+        return None, "SKIP: enc-dec speech decoder has no sub-quadratic variant (DESIGN.md)"
+    if cfg.family in ("ssm", "hybrid"):
+        return cfg, "native sub-quadratic (SSM/hybrid)"
+    if cfg.name.startswith("gemma2"):
+        pat = tuple("local" for _ in cfg.layer_pattern)
+        return dataclasses.replace(cfg, layer_pattern=pat), "swa-variant: global layers windowed at 500k"
+    pat = tuple("local" if k in ("attn", "global") else k for k in cfg.layer_pattern)
+    return (dataclasses.replace(cfg, layer_pattern=pat,
+                                sliding_window=cfg.sliding_window or 8192),
+            "swa-variant(window=8192) per brief for dense archs at 500k")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool = False,
+                  attn_impl: str = "xla", fsdp=None, mesh=None, plan=None):
+    """Returns (lowered, note) for the (arch, shape, mesh) combination.
+    ``plan``: AdaOper-style execution-plan overrides, e.g.
+    {"moe_2d": True, "attn_seq_shard": True, "remat_policy": "dots"}."""
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg, note = config_for_shape(cfg0, shape_name)
+    if cfg is None:
+        return None, note
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    baxes = batch_axes_for(mesh)
+    ctx = ExecContext(mesh=mesh, batch_axes=baxes, model_axis="model",
+                      attn_impl=attn_impl, plan=dict(plan or {}))
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    key_sds = _sds((2,), jnp.uint32)
+    params_sds = jax.eval_shape(functools.partial(model_lib.init_params, cfg=cfg), key_sds)
+    p_sh = params_shardings(params_sds, cfg, mesh, batch_axes=baxes, fsdp=fsdp)
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, ctx)
+            opt_sds = jax.eval_shape(init_opt_state, params_sds)
+            o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+            batch = {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+            b_sh = batch_shardings(cfg, mesh, shape.kind, baxes)
+            if cfg.is_encoder_decoder:
+                batch["enc_inputs"] = _sds((B, ENC_FRAMES, cfg.d_model), dt)
+            b_sh = {k: b_sh[k] for k in batch}
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_sds, opt_sds, batch)
+        elif shape.kind == "prefill":
+            cache_sds = jax.eval_shape(
+                functools.partial(model_lib.init_cache, cfg, B, S, enc_len=ENC_FRAMES))
+            c_sh = cache_shardings(cache_sds, cfg, mesh, B, batch_axes=baxes)
+
+            if cfg.is_encoder_decoder:
+                def prefill_step(params, cache, tokens, enc_inputs):
+                    logits, cache = model_lib.prefill(params, cfg, tokens, cache, ctx,
+                                                      enc_inputs=enc_inputs)
+                    return logits[:, -1], cache
+                args = (params_sds, cache_sds, _sds((B, S), jnp.int32),
+                        _sds((B, ENC_FRAMES, cfg.d_model), dt))
+                in_sh = (p_sh, c_sh, NamedSharding(mesh, P(baxes, None)),
+                         NamedSharding(mesh, P(baxes, None, None)))
+            else:
+                def prefill_step(params, cache, tokens):
+                    logits, cache = model_lib.prefill(params, cfg, tokens, cache, ctx)
+                    return logits[:, -1], cache
+                args = (params_sds, cache_sds, _sds((B, S), jnp.int32))
+                in_sh = (p_sh, c_sh, NamedSharding(mesh, P(baxes, None)))
+            lowered = jax.jit(prefill_step, in_shardings=in_sh,
+                              out_shardings=(None, c_sh),
+                              donate_argnums=(1,)).lower(*args)
+        else:  # decode
+            cache_sds = jax.eval_shape(
+                functools.partial(model_lib.init_cache, cfg, B, S, enc_len=ENC_FRAMES))
+            c_sh = cache_shardings(cache_sds, cfg, mesh, B, batch_axes=baxes)
+
+            def serve_step(params, cache, token, pos):
+                logits, cache = model_lib.decode_step(params, cfg, token, cache, pos, ctx)
+                return logits, cache
+
+            bspec = baxes if B % max(1, int(jnp.prod(jnp.array([mesh.shape[a] for a in baxes])))) == 0 else None
+            args = (params_sds, cache_sds, _sds((B, 1), jnp.int32), _sds((), jnp.int32))
+            in_sh = (p_sh, c_sh, NamedSharding(mesh, P(bspec, None)), NamedSharding(mesh, P()))
+            lowered = jax.jit(serve_step, in_shardings=in_sh,
+                              out_shardings=(None, c_sh),
+                              donate_argnums=(1,)).lower(*args)
+    return lowered, note
+
+
+def analyse(lowered, compiled, n_devices) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo)
+    la = loop_aware_cost(hlo)  # trip-count-corrected (see utils/hlo_cost.py)
+    out = {
+        "flops": la["flops"],
+        "bytes_accessed": la["bytes"],
+        "collectives": la["collectives"],
+        "collective_bytes": la["collective_bytes"],
+        "xla_flops_once": float(cost.get("flops", 0.0)),
+        "xla_bytes_once": float(cost.get("bytes accessed", 0.0)),
+        "collectives_once": colls,
+        "n_devices": n_devices,
+    }
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        out[attr] = getattr(mem, attr, None)
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            attn_impl: str = "xla", fsdp=None, tag: str = "",
+            save_hlo: bool = True, plan=None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    name = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "plan": dict(plan or {})}
+    try:
+        lowered, note = build_lowered(arch, shape_name, multi_pod, attn_impl,
+                                      fsdp=fsdp, plan=plan)
+        rec["note"] = note
+        if lowered is None:
+            rec["status"] = "skipped"
+        else:
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec.update(analyse(lowered, compiled, 512 if multi_pod else 256))
+            rec["status"] = "ok"
+            if save_hlo:  # keep the HLO so cost-parser fixes don't recompile
+                import gzip
+                os.makedirs(out_dir, exist_ok=True)
+                with gzip.open(os.path.join(out_dir, name + ".hlo.gz"), "wt") as hf:
+                    hf.write(compiled.as_text())
+            rec["lower_s"] = round(t1 - t0, 1)
+            rec["compile_s"] = round(time.time() - t1, 1)
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[{rec['status']:7s}] {name} ({rec['total_s']}s) "
+          f"flops={rec.get('flops', 0):.3e} coll={rec.get('collective_bytes', 0):.3e} "
+          f"{rec.get('note', '')}{rec.get('error', '')}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--attn-impl", default="xla")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--plan", default="",
+                    help="comma list: moe_2d,attn_seq_shard,remat_policy=dots")
+    args = ap.parse_args()
+
+    plan = {}
+    for item in filter(None, args.plan.split(",")):
+        if "=" in item:
+            k, v = item.split("=", 1)
+            plan[k] = v
+        else:
+            plan[item] = True
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.out, args.attn_impl,
+                              fsdp=False if args.no_fsdp else None,
+                              tag=args.tag, plan=plan)
+                n_fail += rec["status"] == "FAIL"
+    print(f"done, failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

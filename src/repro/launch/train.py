@@ -1,0 +1,51 @@
+"""Training driver: ``python -m repro.launch.train --arch tinyllama-1.1b
+--steps 200 --reduced`` trains on the synthetic pipeline (CPU-sized with
+--reduced; full configs are for the pod)."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduced as make_reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.sharding.context import ExecContext
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    print(f"training {cfg.name} ({'reduced' if args.reduced else 'FULL'}): "
+          f"{cfg.num_layers}L d={cfg.d_model} N={cfg.param_count()/1e6:.1f}M")
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    data = SyntheticLM(cfg, DataConfig(batch=args.batch, seq_len=args.seq, seed=args.seed))
+    oc = OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                   total_steps=args.steps)
+    params, opt_state, hist = train_loop(cfg, params, data.batches(args.steps), oc=oc)
+    first, last = hist[0]["loss"], np.mean([h["loss"] for h in hist[-10:]])
+    print(f"loss {first:.4f} -> {last:.4f} over {args.steps} steps")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt_state, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    encode,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    train_logits,
+)

@@ -1,0 +1,40 @@
+"""Tiny-YOLOv2-style conv detector — the AdaOper paper's evaluation model.
+
+9 conv stages (3x3, leaky-relu) with 2x maxpool in the early stages,
+416x416x3 input -> 13x13x125 detection grid (5 anchors x (20 cls + 5)).
+Runnable in JAX (examples + tests) and mirrored 1:1 by the operator graph
+used in the paper-reproduction simulator experiments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.yolo_v2_tiny import YOLO_STAGES
+
+
+def init_yolo(rng, in_ch=3, dtype=jnp.float32):
+    params = []
+    ch = in_ch
+    for i, (out_ch, _pool) in enumerate(YOLO_STAGES):
+        rng, k = jax.random.split(rng)
+        ksz = 1 if out_ch == 125 else 3
+        w = jax.random.normal(k, (ksz, ksz, ch, out_ch), jnp.float32) * (2.0 / (ksz * ksz * ch)) ** 0.5
+        params.append({"w": w.astype(dtype), "b": jnp.zeros((out_ch,), jnp.float32)})
+        ch = out_ch
+    return params
+
+
+def apply_yolo(params, x):
+    """x (B, H, W, 3) -> (B, 13, 13, 125)."""
+    for p, (out_ch, pool) in zip(params, YOLO_STAGES):
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = x + p["b"]
+        if out_ch != 125:
+            x = jnp.where(x > 0, x, 0.1 * x)  # leaky relu
+        if pool == 2:
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return x

@@ -1,0 +1,102 @@
+"""Top-level model API: init, train forward/loss, prefill, decode.
+
+Supports decoder-only (dense/moe/ssm/hybrid/vlm) and encoder-decoder (audio)
+families through one interface:
+
+  params                  = init_params(rng, cfg)
+  logits, aux             = train_logits(params, cfg, batch, ctx)
+  loss, metrics           = loss_fn(params, cfg, batch, ctx)
+  cache                   = init_cache(cfg, B, max_len, enc_len=...)
+  logits, cache           = prefill(params, cfg, inputs, cache, ctx, ...)
+  logits, cache           = decode_step(params, cfg, token, cache, pos, ctx)
+
+Inputs: token ids (B,S) int32 for ``input_mode=tokens``; for the audio
+frontend stub, ``enc_inputs`` are precomputed frame embeddings (B,T,d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import apply_norm, embed_tokens, init_embed, init_norm, lm_logits
+from repro.sharding.context import ExecContext
+
+
+def init_params(rng, cfg):
+    r = jax.random.split(rng, 4)
+    params = {
+        "embed": init_embed(r[0], cfg),
+        "final_norm": init_norm(cfg),
+        "stages": tfm.init_stack(r[1], cfg, decoder_cross=cfg.is_encoder_decoder),
+    }
+    if cfg.is_encoder_decoder:
+        params["encoder"] = {
+            "stages": tfm.init_stack(r[2], cfg, cross=True),
+            "final_norm": init_norm(cfg),
+        }
+    return params
+
+
+def encode(params, cfg, enc_inputs, ctx):
+    """Audio/enc-dec: enc_inputs (B, T_frames, d_model) frame embeddings."""
+    x = enc_inputs.astype(jnp.dtype(cfg.dtype))
+    x, _, _ = tfm.apply_stack(params["encoder"]["stages"], cfg, x, ctx,
+                              mode="encode", cross=True)
+    return apply_norm(params["encoder"]["final_norm"], x, cfg)
+
+
+def _embed_inputs(params, cfg, inputs):
+    if cfg.input_mode == "embeddings" and inputs.dtype != jnp.int32 and inputs.ndim == 3:
+        return inputs.astype(jnp.dtype(cfg.dtype))
+    return embed_tokens(params["embed"], inputs, cfg).astype(jnp.dtype(cfg.dtype))
+
+
+def train_logits(params, cfg, batch, ctx=ExecContext()):
+    """batch: {'tokens': (B,S)} (+ 'enc_inputs' for enc-dec)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch["enc_inputs"], ctx)
+    x = _embed_inputs(params, cfg, batch["tokens"])
+    x, aux, _ = tfm.apply_stack(params["stages"], cfg, x, ctx, mode="train", enc_out=enc_out)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), aux
+
+
+def loss_fn(params, cfg, batch, ctx=ExecContext()):
+    logits, aux = train_logits(params, cfg, batch, ctx)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold).mean()
+    loss = nll + cfg.router_aux_loss * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def init_cache(cfg, batch, max_len, enc_len=0):
+    dtype = jnp.dtype(cfg.dtype)
+    return tfm.init_stack_cache(cfg, batch, max_len, dtype,
+                                decoder_cross=cfg.is_encoder_decoder, enc_len=enc_len)
+
+
+def prefill(params, cfg, inputs, cache, ctx=ExecContext(), enc_inputs=None):
+    """Run the prompt through the model, writing mixer state into ``cache``.
+    Returns (logits at every position, cache)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, enc_inputs, ctx)
+    x = _embed_inputs(params, cfg, inputs)
+    x, _, cache = tfm.apply_stack(params["stages"], cfg, x, ctx, mode="prefill",
+                                  cache=cache, enc_out=enc_out)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), cache
+
+
+def decode_step(params, cfg, token, cache, pos, ctx=ExecContext()):
+    """token (B,1) int32; pos scalar int32 (current write position)."""
+    x = embed_tokens(params["embed"], token, cfg).astype(jnp.dtype(cfg.dtype))
+    x, _, cache = tfm.apply_stack(params["stages"], cfg, x, ctx, mode="decode",
+                                  cache=cache, pos=pos)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), cache

@@ -1,0 +1,183 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Baseline distribution scheme (paper-faithful "partition by processor class"
+analogue): experts are sharded across the ``model`` mesh axis; every model
+shard routes the full local token set, computes ONLY its local experts'
+contributions via a capacity-bounded dispatch buffer, and the contributions
+are combined with a single ``psum`` over the model axis (one all-reduce of
+activations). The optimized all-to-all dispatch variant lives in
+``moe_a2a.py`` (§Perf hillclimb).
+
+The dispatch uses the sort-free "argsort + searchsorted" position trick —
+no (T, E) one-hot is ever materialised, so it scales to 384 experts x 1M
+tokens.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, split
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(rng, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    E, F, D = cfg.num_experts, cfg.moe_d_ff, cfg.d_model
+    r = split(rng, 5)
+    p = {
+        "router": dense_init(r[0], D, E, jnp.float32),
+        "w_gate": (jax.random.normal(r[1], (E, D, F), jnp.float32) * D ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(r[2], (E, D, F), jnp.float32) * D ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(r[3], (E, F, D), jnp.float32) * F ** -0.5).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        Fs = cfg.num_shared_experts * F
+        rs = split(r[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(rs[0], D, Fs, dt),
+            "w_up": dense_init(rs[1], D, Fs, dt),
+            "w_down": dense_init(rs[2], Fs, D, dt),
+        }
+    return p
+
+
+def _capacity(T, k, E, cf=CAPACITY_FACTOR):
+    """Static per-local-expert capacity given T local tokens."""
+    per = T * k * cf / E
+    return max(1, int(-(-per // 1)))
+
+
+def _local_expert_partial(xt, gates, ids, wg, wu, wd, e0, E_l, C):
+    """Contribution of experts [e0, e0+E_l) to all T local tokens.
+
+    xt (T,D); gates/ids (T,k); wg/wu (E_l,D,F); wd (E_l,F,D).
+    Returns out (T,D) float32 partial sum.
+    """
+    T, D = xt.shape
+    k = ids.shape[1]
+    flat_e = ids.reshape(-1)
+    flat_g = gates.reshape(-1)
+    tok = jnp.arange(T * k) // k
+    local = (flat_e >= e0) & (flat_e < e0 + E_l)
+    le = jnp.where(local, flat_e - e0, E_l)  # E_l == drop bucket
+    order = jnp.argsort(le, stable=True)
+    se = le[order]
+    stok = tok[order]
+    sg = flat_g[order]
+    starts = jnp.searchsorted(se, jnp.arange(E_l))
+    pos = jnp.arange(T * k) - starts[jnp.minimum(se, E_l - 1)]
+    valid = (se < E_l) & (pos < C)
+    slot = jnp.where(valid, se * C + jnp.where(valid, pos, 0), E_l * C)
+    # dispatch: scatter tokens into (E_l*C [+1 drop], D)
+    buf = jnp.zeros((E_l * C + 1, D), xt.dtype).at[slot].add(xt[stok])
+    buf = buf[: E_l * C].reshape(E_l, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum("ecd,edf->ecf", buf, wu)
+    yb = jnp.einsum("ecf,efd->ecd", h, wd).reshape(E_l * C, D)
+    # combine: gather each assignment's slot output, weight by gate
+    contrib = jnp.where(valid[:, None], yb[jnp.minimum(slot, E_l * C - 1)], 0.0)
+    contrib = contrib.astype(jnp.float32) * sg[:, None]
+    out = jnp.zeros((T, D), jnp.float32).at[stok].add(contrib)
+    return out
+
+
+def _route(xt, router_w, k):
+    logits = xt.astype(jnp.float32) @ router_w  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return probs, gates, ids
+
+
+def _aux_loss(probs, ids, E):
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    P_e = probs.mean(axis=0)  # (E,)
+    counts = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f_e = counts / jnp.maximum(counts.sum(), 1.0)
+    return E * jnp.sum(f_e * P_e)
+
+
+def _moe_2d(p, x, cfg, ctx):
+    """Weight-stationary 2D expert parallelism (§Perf beyond-paper variant,
+    for decode: tokens are few). Experts sharded on 'model', every expert's
+    FFN width F sharded on 'data'; tokens REPLICATED. Each (d, m) shard
+    computes its local experts' partial-F contribution and a single psum
+    over BOTH axes combines. No per-step FSDP weight gather — the 2 TB of
+    kimi-k2 expert weights never move."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    M = ctx.model_parallel
+    E_l = E // M
+    ax = ctx.model_axis
+    daxes = tuple(ctx.batch_axes)
+    C = _capacity(B * S, k, E, cfg.moe_capacity_factor)
+
+    def fn(x_l, rw, wg, wu, wd):
+        xt = x_l.reshape(B * S, D)
+        probs, gates, ids = _route(xt, rw, k)
+        m = jax.lax.axis_index(ax)
+        out = _local_expert_partial(xt, gates, ids, wg, wu, wd, m * E_l, E_l, C)
+        out = jax.lax.psum(out, (ax,) + daxes)
+        aux = jax.lax.pmean(_aux_loss(probs, ids, E), ax)
+        return out.reshape(B, S, D).astype(x_l.dtype), aux
+
+    return jax.shard_map(
+        fn, mesh=ctx.mesh,
+        in_specs=(P(None, None, None), P(),
+                  P(ax, None, daxes), P(ax, None, daxes), P(ax, daxes, None)),
+        out_specs=(P(None, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+
+def moe_apply(p, x, cfg, ctx):
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar f32)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    M = ctx.model_parallel
+    E_l = E // M if M > 1 and E % M == 0 else E
+
+    if (M > 1 and E % M == 0 and ctx.plan.get("moe_2d")
+            and cfg.moe_d_ff % max(1, ctx.batch_parallel) == 0):
+        out, aux = _moe_2d(p, x, cfg, ctx)
+    elif M > 1 and E % M == 0:
+        mesh = ctx.mesh
+        bspec = P(ctx.batch_axes if B % max(1, ctx.batch_parallel) == 0 and ctx.batch_parallel > 1 else None,
+                  None, None)
+        T_local = (B // max(1, ctx.batch_parallel) if bspec[0] is not None else B) * S
+        C = _capacity(T_local, k, E, cfg.moe_capacity_factor)
+        ax = ctx.model_axis
+
+        def fn(x_l, rw, wg, wu, wd):
+            Bl, Sl, _ = x_l.shape
+            xt = x_l.reshape(Bl * Sl, D)
+            probs, gates, ids = _route(xt, rw, k)
+            m = jax.lax.axis_index(ax)
+            out = _local_expert_partial(xt, gates, ids, wg, wu, wd, m * E_l, E_l, C)
+            out = jax.lax.psum(out, ax)
+            aux = jax.lax.pmean(_aux_loss(probs, ids, E), ax)
+            return out.reshape(Bl, Sl, D).astype(x_l.dtype), aux
+
+        out, aux = jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(bspec, P(), P(ax, None, None), P(ax, None, None), P(ax, None, None)),
+            out_specs=(bspec, P()),
+            check_vma=False,
+        )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    else:
+        xt = x.reshape(B * S, D)
+        probs, gates, ids = _route(xt, p["router"], k)
+        C = _capacity(B * S, k, E, cfg.moe_capacity_factor)
+        out = _local_expert_partial(xt, gates, ids, p["w_gate"], p["w_up"], p["w_down"], 0, E, C)
+        aux = _aux_loss(probs, ids, E)
+        out = out.reshape(B, S, D).astype(x.dtype)
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        out = out + h @ sp["w_down"]
+    return out, aux

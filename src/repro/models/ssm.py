@@ -1,0 +1,274 @@
+"""State-space mixers: Mamba2 (SSD, scalar per-head decay) and Mamba1
+(diagonal selective scan, as used by Jamba).
+
+Forward paths are chunked (SSD dual form / chunked associative scan) so the
+sequence dim never materialises O(S^2) or serialises O(S) HLO; decode paths
+are single-step recurrences against a carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm_head, split
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C), w (C,W), b (C,)."""
+    W = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(xp[:, i : i + S, :] * w[:, i] for i in range(W))
+    return out + b
+
+
+def _conv_step(state, x_new, w, b):
+    """state (B,W-1,C) raw inputs; x_new (B,C). Returns (y (B,C), new_state)."""
+    W = w.shape[1]
+    full = jnp.concatenate([state, x_new[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,cw->bc", full, w) + b
+    return y, full[:, 1:, :]
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    """Mamba2 norm: rmsnorm(y * silu(z))."""
+    g = y * jax.nn.silu(z)
+    return rms_norm_head(g, scale, eps)
+
+
+# ===========================================================================
+# Mamba2 / SSD
+# ===========================================================================
+
+
+def init_mamba2(rng, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    di, N, H = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_num_heads
+    G = 1  # ngroups
+    conv_dim = di + 2 * G * N
+    r = split(rng, 4)
+    return {
+        "in_proj": dense_init(r[0], cfg.d_model, 2 * di + 2 * G * N + H, dt),
+        "conv_w": (jax.random.normal(r[1], (conv_dim, cfg.ssm_d_conv), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),  # softplus^-1
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(r[3], di, cfg.d_model, dt),
+    }
+
+
+def ssd_chunked(x, dA, dt, Bm, Cm, chunk):
+    """SSD dual-form chunked scan.
+
+    x  (B,S,H,P)  head inputs
+    dA (B,S,H)    per-step log decay (= dt * A, negative)
+    dt (B,S,H)    input scaling
+    Bm (B,S,N)    input projection (ngroups=1)
+    Cm (B,S,N)    output projection
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(B, nc, Q, H, P)
+    dAc = dA.reshape(B, nc, Q, H).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(dAc, axis=2)  # (B,nc,Q,H)
+    # intra-chunk "attention": M[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j, i>=j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B,nc,Q,Q)
+    M = cb[..., None] * L * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, xc.astype(jnp.float32))
+
+    # per-chunk final state: S_c = sum_j exp(cum_Q - cum_j) dt_j B_j x_j
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    Sc = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_out * dtc, Bc, xc.astype(jnp.float32))
+    # inter-chunk recurrence over nc
+    a_chunk = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def carry_fn(h, xs):
+        a, s = xs  # a (B,H), s (B,H,P,N)
+        h_new = h * a[:, :, None, None] + s
+        return h_new, h
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_last, h_prev = jax.lax.scan(carry_fn, h0, (a_chunk.transpose(1, 0, 2), Sc.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N) state entering each chunk
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, h_prev, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(B, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), h_last
+
+
+def mamba2_forward(p, xin, cfg):
+    """xin (B,S,D) -> (y (B,S,D), (conv_state, ssm_state))."""
+    B, S, _ = xin.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    zxbcdt = xin @ p["in_proj"]
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xBC_conv = jax.nn.silu(_causal_conv(xBC, p["conv_w"].astype(jnp.float32), p["conv_b"]).astype(xin.dtype))
+    xs, Bm, Cm = jnp.split(xBC_conv, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    y, h_last = ssd_chunked(xs.reshape(B, S, H, P), dt * A, dt, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xs.reshape(B, S, H, P).astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(xin.dtype)
+    y = _gated_rmsnorm(y, z, p["norm"])
+    conv_state = xBC[:, -(cfg.ssm_d_conv - 1):, :] if S >= cfg.ssm_d_conv - 1 else jnp.pad(
+        xBC, ((0, 0), (cfg.ssm_d_conv - 1 - S, 0), (0, 0)))
+    return y @ p["out_proj"], (conv_state.astype(xin.dtype), h_last)
+
+
+def mamba2_decode(p, xin, cfg, conv_state, ssm_state):
+    """xin (B,1,D); conv_state (B,W-1,conv_dim); ssm_state (B,H,P,N)."""
+    B = xin.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    zxbcdt = (xin @ p["in_proj"])[:, 0]  # (B, ...)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    y_conv, conv_state = _conv_step(conv_state.astype(jnp.float32), xBC.astype(jnp.float32),
+                                    p["conv_w"].astype(jnp.float32), p["conv_b"])
+    xBC_conv = jax.nn.silu(y_conv)
+    xs, Bm, Cm = jnp.split(xBC_conv, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, H, P)
+    dA = jnp.exp(dt * A)  # (B,H)
+    ssm_state = ssm_state * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm, xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, ssm_state) + p["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(xin.dtype)
+    y = _gated_rmsnorm(y, z.astype(xin.dtype), p["norm"])
+    return (y @ p["out_proj"])[:, None, :], (conv_state.astype(xin.dtype), ssm_state)
+
+
+# ===========================================================================
+# Mamba1 (Jamba's mixer)
+# ===========================================================================
+
+
+def _dt_rank(cfg):
+    return max(1, -(-cfg.d_model // 16))
+
+
+def init_mamba1(rng, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    di, N = cfg.d_inner, cfg.ssm_d_state
+    rank = _dt_rank(cfg)
+    r = split(rng, 5)
+    return {
+        "in_proj": dense_init(r[0], cfg.d_model, 2 * di, dt),
+        "conv_w": (jax.random.normal(r[1], (di, cfg.ssm_d_conv), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(r[2], di, rank + 2 * N, dt),
+        "dt_proj": dense_init(r[3], rank, di, dt),
+        "dt_proj_b": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        # jamba's inner rmsnorms on dt/B/C
+        "dt_norm": jnp.ones((rank,), jnp.float32),
+        "b_norm": jnp.ones((N,), jnp.float32),
+        "c_norm": jnp.ones((N,), jnp.float32),
+        "out_proj": dense_init(r[4], di, cfg.d_model, dt),
+    }
+
+
+def _selective_scan_chunked(u, dt, Bm, Cm, A, chunk):
+    """Diagonal selective scan via chunked associative scan.
+
+    u (B,S,di), dt (B,S,di), Bm/Cm (B,S,N), A (di,N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t  ;  y_t = sum_N C_t h_t.
+    """
+    B, S, di = u.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    uc = u.reshape(B, nc, Q, di).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, di).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    def chunk_fn(h0, xs):
+        ucq, dtq, bq, cq = xs  # (B,Q,di), (B,Q,di), (B,Q,N), (B,Q,N)
+        dA = jnp.exp(dtq[..., None] * A)  # (B,Q,di,N)
+        dBu = (dtq * ucq)[..., None] * bq[:, :, None, :]  # (B,Q,di,N)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (dA, dBu), axis=1)
+        h = h0[:, None] * a_cum + b_cum  # (B,Q,di,N)
+        y = jnp.einsum("bqdn,bqn->bqd", h, cq)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_fn), h0, (uc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * Q, di)[:, :S]
+    return y, h_last
+
+
+def mamba1_forward(p, xin, cfg):
+    B, S, _ = xin.shape
+    di, N = cfg.d_inner, cfg.ssm_d_state
+    rank = _dt_rank(cfg)
+    xz = xin @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_conv(x, p["conv_w"].astype(jnp.float32), p["conv_b"]).astype(xin.dtype))
+    dbc = x_conv @ p["x_proj"]
+    dt_r, Bm, Cm = jnp.split(dbc, [rank, rank + N], axis=-1)
+    dt_r = rms_norm_head(dt_r, p["dt_norm"])
+    Bm = rms_norm_head(Bm, p["b_norm"])
+    Cm = rms_norm_head(Cm, p["c_norm"])
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_proj_b"])  # (B,S,di)
+    A = -jnp.exp(p["A_log"])  # (di,N)
+    y, h_last = _selective_scan_chunked(x_conv, dt, Bm, Cm, A, cfg.ssm_chunk)
+    y = y + p["D"] * x_conv.astype(jnp.float32)
+    y = (y.astype(xin.dtype)) * jax.nn.silu(z)
+    conv_state = x[:, -(cfg.ssm_d_conv - 1):, :] if S >= cfg.ssm_d_conv - 1 else jnp.pad(
+        x, ((0, 0), (cfg.ssm_d_conv - 1 - S, 0), (0, 0)))
+    return y @ p["out_proj"], (conv_state.astype(xin.dtype), h_last)
+
+
+def mamba1_decode(p, xin, cfg, conv_state, ssm_state):
+    B = xin.shape[0]
+    di, N = cfg.d_inner, cfg.ssm_d_state
+    rank = _dt_rank(cfg)
+    xz = (xin @ p["in_proj"])[:, 0]
+    x, z = jnp.split(xz, 2, axis=-1)
+    y_conv, conv_state = _conv_step(conv_state.astype(jnp.float32), x.astype(jnp.float32),
+                                    p["conv_w"].astype(jnp.float32), p["conv_b"])
+    x_conv = jax.nn.silu(y_conv).astype(xin.dtype)
+    dbc = x_conv @ p["x_proj"]
+    dt_r, Bm, Cm = jnp.split(dbc, [rank, rank + N], axis=-1)
+    dt_r = rms_norm_head(dt_r, p["dt_norm"])
+    Bm = rms_norm_head(Bm, p["b_norm"]).astype(jnp.float32)
+    Cm = rms_norm_head(Cm, p["c_norm"]).astype(jnp.float32)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_proj_b"])  # (B,di)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)  # (B,di,N)
+    ssm_state = ssm_state * dA + (dt * x_conv.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", ssm_state, Cm) + p["D"] * x_conv.astype(jnp.float32)
+    y = y.astype(xin.dtype) * jax.nn.silu(z)
+    return (y @ p["out_proj"])[:, None, :], (conv_state.astype(xin.dtype), ssm_state)

@@ -1,0 +1,275 @@
+"""Decoder stack: periodic-stage scan over heterogeneous layers.
+
+Layers are grouped into *stages*: a (possibly unrolled) repeating pattern of
+period layers (e.g. gemma2's (local, global) pair, jamba's 8-layer
+mamba/attn block) scanned ``repeats`` times with stacked params. This keeps
+the HLO size O(period), independent of depth — essential for CPU-hosted
+compiles of 61-layer trillion-param configs.
+
+Modes:
+  train   — full causal forward, no cache, remat per stage step.
+  prefill — full causal forward writing mixer states / KV into a
+            preallocated cache at positions [0, S).
+  decode  — one token at position ``pos`` against the cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm, split
+
+ATTN_KINDS = ("attn", "local", "global")
+
+
+# ---------------------------------------------------------------------------
+# stage decomposition
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Stage:
+    repeats: int
+    pattern: Tuple[Tuple[str, str], ...]  # ((mixer_kind, mlp_kind), ...)
+
+
+def compute_stages(cfg, cross=False) -> List[Stage]:
+    seq = list(zip(cfg.layer_kinds(), cfg.mlp_kinds()))
+    if cross:  # encoder stacks: non-causal attn + dense mlp
+        seq = [("attn", "dense")] * cfg.num_encoder_layers
+    for prefix in range(0, len(seq)):
+        rest = seq[prefix:]
+        if not rest:
+            break
+        for p in range(1, len(rest) + 1):
+            if len(rest) % p:
+                continue
+            if all(rest[i] == rest[i % p] for i in range(len(rest))):
+                stages = []
+                if prefix:
+                    stages.append(Stage(1, tuple(seq[:prefix])))
+                stages.append(Stage(len(rest) // p, tuple(rest[:p])))
+                return stages
+    return [Stage(1, tuple(seq))]
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer(rng, cfg, kind, mlp_kind, decoder_cross=False):
+    r = split(rng, 6)
+    p = {"pre_norm": init_norm(cfg)}
+    if kind in ATTN_KINDS:
+        p["attn"] = att.init_mla(r[0], cfg) if cfg.use_mla else att.init_gqa(r[0], cfg)
+    elif kind == "ssd":
+        p["mixer"] = ssm.init_mamba2(r[0], cfg)
+    elif kind == "mamba":
+        p["mixer"] = ssm.init_mamba1(r[0], cfg)
+    if cfg.post_block_norm:
+        p["post_norm"] = init_norm(cfg)
+    if decoder_cross:
+        p["cross_norm"] = init_norm(cfg)
+        p["cross"] = att.init_gqa(r[1], cfg)
+    if mlp_kind != "none":
+        p["mlp_norm"] = init_norm(cfg)
+        if cfg.post_block_norm:
+            p["mlp_post_norm"] = init_norm(cfg)
+        p["mlp"] = moe_mod.init_moe(r[2], cfg) if mlp_kind == "moe" else init_mlp(r[2], cfg)
+    return p
+
+
+def init_layer_cache(cfg, kind, batch, max_len, dtype, decoder_cross=False, enc_len=0):
+    c = {}
+    if kind in ATTN_KINDS:
+        if cfg.use_mla:
+            c["c_kv"] = jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype)
+            c["k_rope"] = jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)
+        else:
+            c["k"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+            c["v"] = jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    elif kind == "ssd":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_d_state
+        c["conv"] = jnp.zeros((batch, cfg.ssm_d_conv - 1, conv_dim), dtype)
+        c["ssm"] = jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_d_state), jnp.float32)
+    elif kind == "mamba":
+        c["conv"] = jnp.zeros((batch, cfg.ssm_d_conv - 1, cfg.d_inner), dtype)
+        c["ssm"] = jnp.zeros((batch, cfg.d_inner, cfg.ssm_d_state), jnp.float32)
+    if decoder_cross:
+        c["xk"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        c["xv"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return c
+
+
+def _window(cfg, kind):
+    return cfg.sliding_window if kind == "local" else None
+
+
+def apply_layer(lp, x, cfg, kind, mlp_kind, ctx, mode, cache, pos,
+                enc_out=None, causal=True):
+    """Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    h = apply_norm(lp["pre_norm"], x, cfg)
+
+    # ---- mixer ----
+    if kind in ATTN_KINDS:
+        if mode == "decode":
+            if cfg.use_mla:
+                mix, (ck, kr) = att.mla_decode(lp["attn"], h, cfg, cache["c_kv"],
+                                               cache["k_rope"], pos, impl=ctx.attn_impl)
+                new_cache.update(c_kv=ck, k_rope=kr)
+            else:
+                mix, (ck, cv) = att.gqa_decode(lp["attn"], h, cfg, cache["k"], cache["v"],
+                                               pos, window=_window(cfg, kind), impl=ctx.attn_impl)
+                new_cache.update(k=ck, v=cv)
+        else:
+            if cfg.use_mla:
+                mix, (c_kv, k_rope) = att.mla_forward(lp["attn"], h, cfg, impl=ctx.attn_impl)
+                if mode == "prefill":
+                    new_cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+                        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+                    new_cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+                        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, axis=1)
+            else:
+                if causal:
+                    mix, (k, v) = att.gqa_forward(lp["attn"], h, cfg,
+                                                  window=_window(cfg, kind),
+                                                  impl=ctx.attn_impl, ctx=ctx)
+                else:  # encoder self-attention
+                    B, S, _ = h.shape
+                    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+                    q, k, v = att._project_qkv(lp["attn"], h, cfg, positions)
+                    mix = att.attend(q, k, v, causal=False, impl=ctx.attn_impl)
+                    mix = mix.reshape(B, S, cfg.q_dim) @ lp["attn"]["wo"]
+                if mode == "prefill":
+                    new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                        cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+                    new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                        cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+    elif kind in ("ssd", "mamba"):
+        fwd = ssm.mamba2_forward if kind == "ssd" else ssm.mamba1_forward
+        step = ssm.mamba2_decode if kind == "ssd" else ssm.mamba1_decode
+        if mode == "decode":
+            mix, (conv_s, ssm_s) = step(lp["mixer"], h, cfg, cache["conv"], cache["ssm"])
+            new_cache.update(conv=conv_s, ssm=ssm_s)
+        else:
+            mix, (conv_s, ssm_s) = fwd(lp["mixer"], h, cfg)
+            if mode == "prefill":
+                new_cache.update(conv=conv_s.astype(cache["conv"].dtype), ssm=ssm_s)
+    else:
+        raise ValueError(kind)
+
+    if cfg.post_block_norm:
+        mix = apply_norm(lp["post_norm"], mix, cfg)
+    x = x + mix
+
+    # ---- cross attention (enc-dec decoder layers) ----
+    if "cross" in lp:
+        hc = apply_norm(lp["cross_norm"], x, cfg)
+        if mode == "decode":
+            xo = att.gqa_cross(lp["cross"], hc, cfg, cache["xk"], cache["xv"], impl=ctx.attn_impl)
+        else:
+            ek, ev = att.cross_kv(lp["cross"], enc_out, cfg)
+            xo = att.gqa_cross(lp["cross"], hc, cfg, ek, ev, impl=ctx.attn_impl)
+            if mode == "prefill":
+                new_cache.update(xk=ek.astype(cache["xk"].dtype), xv=ev.astype(cache["xv"].dtype))
+        x = x + xo
+
+    # ---- mlp ----
+    if mlp_kind != "none":
+        h2 = apply_norm(lp["mlp_norm"], x, cfg)
+        if mlp_kind == "moe":
+            y, aux = moe_mod.moe_apply(lp["mlp"], h2, cfg, ctx)
+        else:
+            y = apply_mlp(lp["mlp"], h2, cfg)
+        if cfg.post_block_norm:
+            y = apply_norm(lp["mlp_post_norm"], y, cfg)
+        x = x + y
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_stack(rng, cfg, cross=False, decoder_cross=False):
+    """cross=True -> encoder stack. decoder_cross=True -> decoder w/ x-attn."""
+    stages = compute_stages(cfg, cross=cross)
+    params = []
+    for st in stages:
+        keys = jax.random.split(rng, st.repeats)
+        rng = jax.random.fold_in(rng, 7)
+
+        def one(k):
+            ks = jax.random.split(k, len(st.pattern))
+            return {f"l{j}": init_layer(ks[j], cfg, kind, mlp,
+                                        decoder_cross=(decoder_cross and kind in ATTN_KINDS))
+                    for j, (kind, mlp) in enumerate(st.pattern)}
+
+        params.append(jax.vmap(one)(keys))
+    return params
+
+
+def init_stack_cache(cfg, batch, max_len, dtype, decoder_cross=False, enc_len=0):
+    stages = compute_stages(cfg)
+    caches = []
+    for st in stages:
+        one = {f"l{j}": init_layer_cache(cfg, kind, batch, max_len, dtype,
+                                         decoder_cross=decoder_cross and kind in ATTN_KINDS,
+                                         enc_len=enc_len)
+               for j, (kind, mlp) in enumerate(st.pattern)}
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (st.repeats,) + a.shape).copy(), one))
+    return caches
+
+
+def apply_stack(stage_params, cfg, x, ctx, mode, cache=None, pos=0,
+                enc_out=None, cross=False):
+    stages = compute_stages(cfg, cross=cross)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, st in enumerate(stages):
+        sp = stage_params[si]
+        sc = cache[si] if cache is not None else None
+
+        def body(carry, xs, _pattern=st.pattern):
+            xc, aux = carry
+            lp, cin = xs if sc is not None else (xs, None)
+            cout = {}
+            for j, (kind, mlp) in enumerate(_pattern):
+                xc, a, cj = apply_layer(
+                    lp[f"l{j}"], xc, cfg, kind, mlp, ctx, mode,
+                    cin[f"l{j}"] if cin is not None else None, pos,
+                    enc_out=enc_out, causal=not cross)
+                aux = aux + a
+                cout[f"l{j}"] = cj
+            return (xc, aux), (cout if sc is not None else None)
+
+        if mode == "train":
+            # remat policy is a partitioner/plan knob (§Perf): "full" remats
+            # everything (min memory, max recompute); "dots" saves matmul
+            # outputs so the backward pass doesn't recompute attention twice
+            # (the inner chunked-attention scan is checkpointed as well, so
+            # full outer remat triples score traffic).
+            policy = ctx.plan.get("remat_policy", "full") if hasattr(ctx, "plan") else "full"
+            if policy == "dots":
+                fn = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            elif policy == "none":
+                fn = body
+            else:
+                fn = jax.checkpoint(body)
+        else:
+            fn = body
+        xs = (sp, sc) if sc is not None else sp
+        (x, aux_total), c_new = jax.lax.scan(fn, (x, aux_total), xs)
+        new_caches.append(c_new)
+    return x, aux_total, (new_caches if cache is not None else None)

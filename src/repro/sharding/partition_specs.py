@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules -> PartitionSpec trees.
+
+MaxText-style rules keyed on parameter path + shape:
+  * output-projection dims (q/kv/gate/up, vocab) -> 'model'
+  * input-projection dims (wo, w_down first dim)  -> 'model'
+  * remaining large dims optionally FSDP-sharded along the batch axes
+    (on by default for models >= ``FSDP_THRESHOLD`` params — kimi-k2's 2 TB
+    of bf16 weights *must* spread over all chips)
+  * experts -> 'model' (expert parallelism); expert F dim FSDP-sharded,
+    gathered per layer inside the scan step (ZeRO-3 style)
+  * dims not divisible by the mesh axis are REPLICATED, never padded.
+
+Activation / cache rules:
+  * batch -> ('pod','data') when divisible, else KV-sequence -> 'data'
+  * kv heads -> 'model' when divisible, else head_dim -> 'model'
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP_THRESHOLD = 8e9  # params
+
+
+def _div(n, mesh, axis) -> bool:
+    return axis is not None and n % int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))])) == 0
+
+
+def _maybe(n, mesh, axis):
+    return axis if _div(n, mesh, axis) else None
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh, model_axis="model",
+               fsdp_axes=None) -> P:
+    """Rule table. ``path`` is the '/'-joined pytree path."""
+    m = model_axis
+    f = fsdp_axes
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    leaf = path.split("/")[-1]
+
+    if leaf in ("embedding", "lm_head"):
+        if leaf == "embedding":  # (V, D)
+            return P(_maybe(shape[0], mesh, m), _maybe(shape[1], mesh, f))
+        return P(_maybe(shape[0], mesh, f), _maybe(shape[1], mesh, m))  # (D, V)
+    if leaf in ("wq", "wk", "wv", "w_gate", "w_up", "wi") and nd == 2:
+        return P(_maybe(shape[0], mesh, f), _maybe(shape[1], mesh, m))
+    if leaf in ("wo", "w_down", "out_proj") and nd == 2:
+        return P(_maybe(shape[0], mesh, m), _maybe(shape[1], mesh, f))
+    if leaf == "w_dkv":  # (D, lr+rope)
+        return P(_maybe(shape[0], mesh, f), None)
+    if leaf == "w_ukv":  # (lr, H, nope+vd)
+        return P(None, _maybe(shape[1], mesh, m), None)
+    if leaf == "router":
+        return P(None, None)
+    if "mlp" in path and nd == 3:  # moe experts (E,D,F)/(E,F,D)
+        if leaf in ("w_gate", "w_up"):
+            return P(_maybe(shape[0], mesh, m), None, _maybe(shape[2], mesh, f))
+        if leaf == "w_down":
+            return P(_maybe(shape[0], mesh, m), _maybe(shape[1], mesh, f), None)
+    if leaf in ("in_proj", "x_proj", "dt_proj") and nd == 2:  # ssm projections
+        return P(_maybe(shape[0], mesh, f), _maybe(shape[1], mesh, m))
+    if leaf == "conv_w":
+        return P(_maybe(shape[0], mesh, m), None)
+    if nd >= 2 and min(shape[-2:]) >= 1024:  # misc large matrices: fsdp
+        return P(*([None] * (nd - 2) + [_maybe(shape[-2], mesh, f), None]))
+    return P(*([None] * nd))
+
+
+def _stacked(spec: P, extra_lead: int) -> P:
+    """Prefix Nones for scan-stacked leading dims."""
+    return P(*([None] * extra_lead + list(spec)))
+
+
+def params_shardings(params_sds, cfg, mesh, model_axis="model", batch_axes=("data",),
+                     fsdp: bool = None):
+    """Build a NamedSharding pytree matching ``params_sds`` (eval_shape tree)."""
+    if fsdp is None:
+        fsdp = cfg.param_count() * 2 >= FSDP_THRESHOLD  # bytes heuristic @bf16
+    fsdp_axes = tuple(batch_axes) if fsdp else None
+
+    def one(path_tuple, leaf):
+        keys = []
+        for pt in path_tuple:
+            if hasattr(pt, "key"):
+                keys.append(str(pt.key))
+            elif hasattr(pt, "idx"):
+                keys.append(str(pt.idx))
+        path = "/".join(keys)
+        shape = leaf.shape
+        # stage params are scan-stacked: leading dim = repeats
+        lead = 1 if "stages" in keys and len(shape) >= 1 else 0
+        core_shape = shape[lead:]
+        spec = param_spec(path, core_shape, mesh, model_axis, fsdp_axes)
+        if lead:
+            spec = _stacked(spec, lead)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_sds)
+
+
+def batch_shardings(cfg, mesh, shape_kind, batch_axes=("data",)):
+    ba = tuple(batch_axes)
+    return {"tokens": NamedSharding(mesh, P(ba, None)),
+            "labels": NamedSharding(mesh, P(ba, None)),
+            **({"enc_inputs": NamedSharding(mesh, P(ba, None, None))}
+               if cfg.is_encoder_decoder else {})}
+
+
+def cache_shardings(cache_sds, cfg, mesh, batch, model_axis="model",
+                    batch_axes=("data",)):
+    """KV/state-cache sharding per the activation rules."""
+    bp = int(np.prod([mesh.shape[a] for a in batch_axes]))
+    batch_ok = batch % bp == 0
+    ba = tuple(batch_axes)
+    seq_axis = None if batch_ok else "data"
+
+    def one(path_tuple, leaf):
+        name = str(path_tuple[-1].key) if hasattr(path_tuple[-1], "key") else ""
+        shape = leaf.shape  # leading repeat dim from stacking
+        b_spec = ba if batch_ok else None
+        if name in ("k", "v", "xk", "xv"):  # (R,B,S,Hkv,Dh)
+            hkv, dh = shape[-2], shape[-1]
+            h_spec = _maybe(hkv, mesh, model_axis)
+            # kv_heads < TP width: shard the KV SEQUENCE on 'model' instead
+            # (flash-decode style partial-softmax) — head_dim sharding makes
+            # XLA all-gather the whole cache per layer (§Perf hillclimb 1).
+            s_spec = seq_axis if h_spec is not None else (seq_axis or model_axis)
+            return NamedSharding(mesh, P(None, b_spec, s_spec, h_spec, None))
+        if name in ("c_kv", "k_rope"):  # (R,B,S,r)
+            return NamedSharding(mesh, P(None, b_spec, seq_axis,
+                                         _maybe(shape[-1], mesh, model_axis) if name == "c_kv" else None))
+        if name == "ssm":  # (R,B,H,P,N) or (R,B,di,N)
+            return NamedSharding(mesh, P(None, b_spec, _maybe(shape[2], mesh, model_axis),
+                                         *([None] * (len(shape) - 3))))
+        if name == "conv":  # (R,B,W-1,C)
+            return NamedSharding(mesh, P(None, b_spec, None, _maybe(shape[-1], mesh, model_axis)))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)

@@ -1,0 +1,66 @@
+"""AdamW + global-norm clipping + cosine schedule, from scratch on pytrees.
+
+Moments are kept in the parameter dtype (bf16 for the big configs) so the
+optimizer-state footprint at kimi-k2 scale stays within the pod; this is a
+deliberate production tradeoff recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def init_opt_state(params):
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def schedule(oc: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(oc.warmup_steps, 1))
+    prog = jnp.clip((step - oc.warmup_steps) / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    return oc.lr * warm * (0.5 * (1 + jnp.cos(jnp.pi * prog)))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, oc: OptConfig):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = schedule(oc, step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = oc.b1 * m32 + (1 - oc.b1) * g
+        v_new = oc.b2 * v32 + (1 - oc.b2) * g * g
+        mh = m_new / (1 - oc.b1 ** step)
+        vh = v_new / (1 - oc.b2 ** step)
+        delta = lr * (mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32))
+        return ((p.astype(jnp.float32) - delta).astype(p.dtype),
+                m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gn, "lr": lr}

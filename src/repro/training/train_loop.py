@@ -1,0 +1,37 @@
+"""Train-step factory + simple host loop (used by examples and launch)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.sharding.context import ExecContext
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg, ctx: ExecContext = ExecContext(), oc: OptConfig = OptConfig()):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, ctx), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, oc)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg, params, batches, ctx=ExecContext(), oc=OptConfig(), log_every=10):
+    step_fn = jax.jit(make_train_step(cfg, ctx, oc), donate_argnums=(0, 1))
+    opt_state = init_opt_state(params)
+    history = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        history.append({k: float(v) for k, v in m.items()})
+        if log_every and i % log_every == 0:
+            print(f"step {i:5d} loss={history[-1]['loss']:.4f} "
+                  f"|g|={history[-1]['grad_norm']:.3f} ({time.time()-t0:.1f}s)")
+    return params, opt_state, history

@@ -1,0 +1,273 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 61 layers reports one layer's FLOPs. This module parses
+the post-optimization HLO, builds the call graph, and multiplies while-loop
+bodies by their ``known_trip_count`` backend_config, giving trip-corrected:
+
+  * dot/convolution FLOPs
+  * collective bytes per kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute)
+  * an HBM-traffic estimate (operand+result bytes of top-level fusions,
+    dots, convs, copies and collectives — i.e. post-fusion buffer traffic)
+
+This is the data source for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>.*?)\s*"
+    r"(?P<kind>[a-z][a-z0-9\-]*)\((?P<rest>.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count\\?":{\\?"n\\?":\\?"(\d+)')
+_CALLS_RE = re.compile(r"(?:body|to_apply|calls|condition)=%?([\w.\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_LCD_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _parse_shape(text: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Returns (total_bytes, [(dtype, dims), ...]) for a type string."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, d))
+    return total, shapes
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    type_str: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+    is_root: bool = False
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: Dict[str, _Op] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+_SKIP_BYTES_KINDS = {"parameter", "constant", "tuple", "get-tuple-element",
+                     "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = _Comp(m.group("name"))
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = _Op(m.group("name"), m.group("kind"), m.group("type"), line,
+                 is_root=line.lstrip().startswith("ROOT"))
+        # operands: %refs in the argument list (before attribute section)
+        arg_part = m.group("rest").split(")", 1)[0]
+        op.operands = _OPERANDS_RE.findall(arg_part)
+        cur.ops[op.name] = op
+        cur.order.append(op.name)
+    return comps, entry
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    out_bytes, out_shapes = _parse_shape(op.type_str)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    m = _LCD_RE.search(op.line)
+    contract = 1
+    if m and op.operands:
+        lhs = comp.ops.get(op.operands[0])
+        if lhs is not None:
+            _, lshapes = _parse_shape(lhs.type_str)
+            if lshapes:
+                dims = lshapes[0][1]
+                for idx in (int(x) for x in m.group(1).split(",") if x):
+                    if idx < len(dims):
+                        contract *= dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: _Op, comp: _Comp) -> float:
+    _, out_shapes = _parse_shape(op.type_str)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    # kernel = operand 1; flops ~= 2 * out * (kernel elems / out_channels)
+    if len(op.operands) > 1:
+        k = comp.ops.get(op.operands[1])
+        if k is not None:
+            _, ks = _parse_shape(k.type_str)
+            if ks and ks[0][1]:
+                kel = 1
+                for d in ks[0][1]:
+                    kel *= d
+                mo = re.search(r"dim_labels=[^ ,]*_([0-9a-z]*)->", op.line)
+                oc = 1
+                if mo and "o" in mo.group(1):
+                    oc = ks[0][1][mo.group(1).index("o")]
+                return 2.0 * out_elems * (kel / max(oc, 1))
+    return 2.0 * out_elems
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._memo: Dict[str, dict] = {}
+
+    def _comp_cost(self, name: str, count_bytes: bool = True) -> dict:
+        """count_bytes=True only along the control-flow spine (entry, while
+        bodies, conditional branches): values inside fused computations stay
+        in registers/VMEM and are not HBM traffic. FLOPs and collectives are
+        counted everywhere."""
+        key = (name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        zero = {"flops": 0.0, "bytes": 0.0,
+                "coll": defaultdict(lambda: {"count": 0.0, "bytes": 0.0})}
+        if comp is None:
+            return zero
+        self._memo[key] = zero  # cycle guard
+        flops = 0.0
+        bytes_ = 0.0
+        coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
+        for opname in comp.order:
+            op = comp.ops[opname]
+            kind = op.kind
+            base_kind = kind[:-6] if kind.endswith("-start") else kind
+            if kind.endswith("-done"):
+                continue
+            if base_kind == "dot":
+                flops += _dot_flops(op, comp)
+            elif base_kind == "convolution":
+                flops += _conv_flops(op, comp)
+            if base_kind in COLLECTIVE_KINDS:
+                b, _ = _parse_shape(op.type_str)
+                coll[base_kind]["count"] += 1
+                coll[base_kind]["bytes"] += b
+            # memory traffic: results + operands of top-level work ops on the
+            # control-flow spine (post-fusion buffers = HBM round trips)
+            if count_bytes and base_kind not in _SKIP_BYTES_KINDS \
+               and base_kind not in ("while", "conditional"):
+                bytes_ += self._op_bytes(op, comp)
+            # nested calls
+            is_ctrl = base_kind in ("while", "conditional")
+            mult = 1.0
+            if base_kind == "while":
+                mt = _TRIP_RE.search(op.line)
+                mult = float(mt.group(1)) if mt else 1.0
+            for callee in set(_CALLS_RE.findall(op.line)):
+                sub = self._comp_cost(callee, count_bytes and is_ctrl)
+                flops += mult * sub["flops"]
+                bytes_ += mult * sub["bytes"]
+                for k, v in sub["coll"].items():
+                    coll[k]["count"] += mult * v["count"]
+                    coll[k]["bytes"] += mult * v["bytes"]
+        out = {"flops": flops, "bytes": bytes_, "coll": coll}
+        self._memo[key] = out
+        return out
+
+    def _root_of(self, comp_name: str) -> Optional[_Op]:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return None
+        for name in comp.order:
+            if comp.ops[name].is_root:
+                return comp.ops[name]
+        return comp.ops[comp.order[-1]] if comp.order else None
+
+    def _op_bytes(self, op: _Op, comp: _Comp) -> float:
+        """Aliasing-aware HBM traffic of one spine op.
+
+        dynamic-slice reads only the slice; dynamic-update-slice writes only
+        the update (XLA aliases the big buffer in place); fusions rooted in
+        either behave the same. Everything else: result + distinct operands.
+        """
+        kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+        res, _ = _parse_shape(op.type_str)
+
+        def operand_size(i):
+            if i < len(op.operands):
+                src = comp.ops.get(op.operands[i])
+                if src is not None:
+                    return _parse_shape(src.type_str)[0]
+            return 0
+
+        if kind == "dynamic-slice" or kind == "gather":
+            return 2.0 * res
+        if kind == "dynamic-update-slice":
+            return 2.0 * operand_size(1)
+        if kind == "scatter":
+            return res + operand_size(2) + operand_size(1)
+        if kind == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.line)
+            root = self._root_of(m.group(1)) if m else None
+            callee = self.comps.get(m.group(1)) if m else None
+            if root is not None and root.kind == "dynamic-slice":
+                return 2.0 * res
+            if root is not None and root.kind == "dynamic-update-slice" and callee:
+                upd = callee.ops.get(root.operands[1]) if len(root.operands) > 1 else None
+                if upd is not None:
+                    return 2.0 * _parse_shape(upd.type_str)[0]
+                return 2.0 * res
+        total = res
+        for o in set(op.operands):
+            src = comp.ops.get(o)
+            if src is not None and src.kind not in ("constant",):
+                total += _parse_shape(src.type_str)[0]
+        return total
+
+    def totals(self) -> dict:
+        c = self._comp_cost(self.entry) if self.entry else {"flops": 0, "bytes": 0, "coll": {}}
+        coll = {k: dict(v) for k, v in c["coll"].items()}
+        return {
+            "flops": c["flops"],
+            "bytes": c["bytes"],
+            "collectives": coll,
+            "collective_bytes": sum(v["bytes"] for v in coll.values()),
+        }
+
+
+def loop_aware_cost(hlo_text: str) -> dict:
+    return HloCost(hlo_text).totals()

@@ -1,0 +1,62 @@
+"""Parse collective traffic out of lowered/compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so the roofline's
+communication term comes from summing operand sizes of every collective op
+in the (optimized, post-SPMD) HLO module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>.*?)\s*(?P<kind>all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from HLO text.
+
+    HLO line format: ``%name = <result-type> <op-kind>(operands), ...``.
+    Bytes counted are the op's RESULT shape bytes (the data that crosses
+    links, up to the collective's algorithmic factor). ``-done`` ops are
+    skipped so async pairs aren't double-counted.
+    """
+    stats: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(m.group("type"))
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())

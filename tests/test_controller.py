@@ -1,0 +1,74 @@
+"""Closed-loop AdaOper controller: the paper's end-to-end claim, in test form."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaOperController,
+    DeviceSim,
+    RuntimeEnergyProfiler,
+    build_yolo_graph,
+    codl_plan,
+    mace_gpu_plan,
+)
+
+
+@pytest.fixture(scope="module")
+def profiler():
+    g = build_yolo_graph()
+    p = RuntimeEnergyProfiler(use_gru=True)
+    p.offline_calibrate([g], n_samples=2000, seed=0)
+    return p
+
+
+def test_controller_runs_and_adapts(profiler):
+    sim = DeviceSim("high", seed=2)
+    ctl = AdaOperController(sim, profiler)
+    g = build_yolo_graph()
+    for _ in range(12):
+        lat, en = ctl.run_inference(g)
+        assert np.isfinite(lat) and np.isfinite(en)
+    st = ctl.stats[g.name]
+    assert len(st.latencies) == 12
+    assert st.repartitions >= 1
+
+
+def test_adaoper_beats_codl_under_high_load(profiler):
+    """Directional reproduction of Fig. 2 (high workload): lower energy AND
+    latency than the CoDL-like latency-planner with offline calibration."""
+    g = build_yolo_graph()
+    codl = codl_plan(g)
+    results = {}
+    for name in ("codl", "adaoper"):
+        sim = DeviceSim("high", seed=7)
+        if name == "codl":
+            lat = en = 0.0
+            for _ in range(15):
+                l, e = sim.exec_graph(g, codl.alphas)
+                lat += l
+                en += e
+                sim.step(l)
+        else:
+            ctl = AdaOperController(sim, profiler)
+            lat = en = 0.0
+            for _ in range(15):
+                l, e = ctl.run_inference(g)
+                lat += l
+                en += e
+        results[name] = (lat, en)
+    assert results["adaoper"][1] < results["codl"][1], results  # energy
+    assert results["adaoper"][0] < results["codl"][0], results  # latency
+
+
+def test_concurrent_workload(profiler):
+    from repro.configs.base import get_config, reduced
+    from repro.core.opgraph import build_transformer_graph
+
+    sim = DeviceSim("moderate", seed=1)
+    ctl = AdaOperController(sim, profiler)
+    g1 = build_yolo_graph()
+    g2 = build_transformer_graph(reduced(get_config("tinyllama-1.1b")), 1, 64,
+                                 kind="decode")
+    stats = ctl.run_concurrent([g1, g2], iters=5)
+    assert set(stats) == {g1.name, g2.name}
+    for s in stats.values():
+        assert len(s.latencies) == 5

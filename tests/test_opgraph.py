@@ -1,0 +1,63 @@
+"""Operator-graph IR builders."""
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, get_config, reduced
+from repro.core.opgraph import build_transformer_graph, build_yolo_graph
+
+
+def test_yolo_graph_matches_model():
+    g = build_yolo_graph()
+    assert len(g) == 9
+    assert all(n.op_type == "conv" for n in g.nodes)
+    # ~7 GFLOPs for tiny-yolo at 416x416 (published number ~6.97)
+    assert 5e9 < g.total_flops() < 9e9
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_transformer_graph_all_archs(arch):
+    cfg = get_config(arch)
+    g = build_transformer_graph(cfg, batch=1, seq=1024, kind="prefill")
+    assert len(g) >= cfg.num_layers  # >=1 op per layer + embed + head
+    assert g.total_flops() > 0
+    assert all(n.flops >= 0 and n.bytes_in > 0 for n in g.nodes)
+
+
+def test_moe_graph_counts_active_experts_only():
+    cfg = get_config("deepseek-v2-lite-16b")
+    g = build_transformer_graph(cfg, batch=1, seq=4096, kind="prefill")
+    moe = [n for n in g.nodes if n.op_type == "moe"]
+    assert len(moe) == 26  # 27 layers, first dense
+    # active-expert flops per token: 3 matmuls * topk * D * F * 2 (+shared)
+    T = 4096
+    expect = 6.0 * T * cfg.d_model * cfg.moe_d_ff * (cfg.top_k + cfg.num_shared_experts)
+    assert moe[0].flops == pytest.approx(expect, rel=0.15)
+
+
+def test_decode_graph_single_token():
+    cfg = get_config("tinyllama-1.1b")
+    gp = build_transformer_graph(cfg, batch=1, seq=32768, kind="prefill")
+    gd = build_transformer_graph(cfg, batch=1, seq=32768, kind="decode")
+    assert gd.total_flops() < gp.total_flops() / 1000
+    # decode attention still reads the whole KV cache
+    att = [n for n in gd.nodes if n.op_type == "attention"][0]
+    assert att.bytes_in > 32768 * cfg.kv_dim  # KV stream dominates
+
+
+def test_scan_not_splittable_in_decode():
+    cfg = get_config("mamba2-2.7b")
+    gd = build_transformer_graph(cfg, batch=1, seq=1024, kind="decode")
+    scans = [n for n in gd.nodes if n.op_type == "scan"]
+    assert scans and all(not n.splittable for n in scans)
+    gp = build_transformer_graph(cfg, batch=1, seq=1024, kind="prefill")
+    scans_p = [n for n in gp.nodes if n.op_type == "scan"]
+    assert all(n.splittable for n in scans_p)
+
+
+def test_sliding_window_caps_attention_kv():
+    cfg = get_config("gemma2-2b")
+    g = build_transformer_graph(cfg, batch=1, seq=32768, kind="decode")
+    att = [n for n in g.nodes if n.op_type == "attention"]
+    flops = sorted(set(round(n.flops) for n in att))
+    assert len(flops) == 2  # local (windowed) vs global layers
+    assert flops[0] * 4 < flops[1]  # 4096 window << 32768 full

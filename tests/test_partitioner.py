@@ -1,0 +1,127 @@
+"""Property-based tests for the energy-aware DP partitioner (hypothesis)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.opgraph import OpGraph, OpNode
+from repro.core.partitioner import (
+    PartitionPlan,
+    _levels_for,
+    dp_partition,
+    incremental_repartition,
+)
+from repro.core.simulator import DeviceSim
+
+
+def _rand_graph(rng, n_ops, splittable_p=0.8):
+    g = OpGraph("rand")
+    for i in range(n_ops):
+        g.nodes.append(OpNode(
+            f"op{i}", "matmul",
+            flops=float(rng.uniform(1e6, 5e9)),
+            bytes_in=float(rng.uniform(1e4, 5e7)),
+            bytes_out=float(rng.uniform(1e4, 5e7)),
+            weight_bytes=float(rng.uniform(0, 5e7)),
+            splittable=bool(rng.random() < splittable_p),
+            split_grain=int(rng.choice([2, 4, 8])),
+            comm_bytes_if_split=float(rng.uniform(0, 1e6)),
+        ))
+    return g
+
+
+def _sim_cost(sim):
+    def fn(op, a, p):
+        return sim.exec_op(op, a, p)
+    return fn
+
+
+def _plan_cost(graph, plan_alphas, cost_fn, lam):
+    lat = en = 0.0
+    prev = plan_alphas[0]
+    for op, a in zip(graph.nodes, plan_alphas):
+        l, e = cost_fn(op, float(a), float(prev))
+        lat += l
+        en += e
+        prev = a
+    return en + lam * lat, lat, en
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.sampled_from([0.0, 0.3, 1e12]))
+def test_dp_matches_bruteforce(seed, n_ops, lam):
+    """The windowed bottom-up DP is exact for additive J = E + lam*T."""
+    rng = np.random.default_rng(seed)
+    g = _rand_graph(rng, n_ops)
+    sim = DeviceSim("moderate", seed=seed)
+    cost = _sim_cost(sim)
+    plan = dp_partition(g, cost, lam=lam)
+    dp_J, _, _ = _plan_cost(g, plan.alphas, cost, lam)
+    levels = [_levels_for(op) for op in g.nodes]
+    best = min(_plan_cost(g, combo, cost, lam)[0]
+               for combo in itertools.product(*levels))
+    assert dp_J <= best + 1e-9 * abs(best) + 1e-15
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 12))
+def test_objectives_ordering(seed, n_ops):
+    """energy-opt has minimal energy; latency-opt minimal latency; EDP in hull."""
+    rng = np.random.default_rng(seed)
+    g = _rand_graph(rng, n_ops)
+    sim = DeviceSim("moderate", seed=seed)
+    cost = _sim_cost(sim)
+    p_lat = dp_partition(g, cost, objective="latency")
+    p_en = dp_partition(g, cost, objective="energy")
+    p_edp = dp_partition(g, cost, objective="edp")
+    assert p_en.pred_energy <= p_lat.pred_energy + 1e-12
+    assert p_lat.pred_latency <= p_en.pred_latency + 1e-12
+    assert p_edp.edp <= p_lat.edp + 1e-9 * p_lat.edp
+    assert p_edp.edp <= p_en.edp + 1e-9 * p_en.edp
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(1.05, 2.0))
+def test_slo_satisfied(seed, slack):
+    rng = np.random.default_rng(seed)
+    g = _rand_graph(rng, 8)
+    sim = DeviceSim("high", seed=seed)
+    cost = _sim_cost(sim)
+    p_lat = dp_partition(g, cost, objective="latency")
+    slo = p_lat.pred_latency * slack
+    p = dp_partition(g, cost, slo=slo)
+    assert p.pred_latency <= slo * (1 + 1e-9)
+    p_en = dp_partition(g, cost, objective="energy")
+    assert p.pred_energy <= p_en.pred_energy * slack + 1e-12 or \
+        p.pred_energy <= p_lat.pred_energy + 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 12))
+def test_incremental_consistency(seed, n_ops):
+    """Segment re-solve keeps untouched alphas, never breaks the plan, and a
+    whole-range re-solve equals a fresh full DP."""
+    rng = np.random.default_rng(seed)
+    g = _rand_graph(rng, n_ops)
+    sim = DeviceSim("moderate", seed=seed)
+    cost = _sim_cost(sim)
+    plan = dp_partition(g, cost, lam=0.5)
+    lo, hi = sorted(rng.integers(0, n_ops, 2).tolist())
+    inc = incremental_repartition(g, plan, cost, (lo, hi), lam=0.5)
+    assert np.allclose(inc.alphas[:lo], plan.alphas[:lo])
+    if hi + 1 < n_ops:
+        assert np.allclose(inc.alphas[hi + 1:], plan.alphas[hi + 1:])
+    full = incremental_repartition(g, plan, cost, (0, n_ops - 1), lam=0.5)
+    fresh = dp_partition(g, cost, lam=0.5)
+    fJ, _, _ = _plan_cost(g, full.alphas, cost, 0.5)
+    freshJ, _, _ = _plan_cost(g, fresh.alphas, cost, 0.5)
+    assert fJ <= freshJ * (1 + 1e-9) + 1e-15
+
+
+def test_non_splittable_ops_binary():
+    rng = np.random.default_rng(0)
+    g = _rand_graph(rng, 10, splittable_p=0.0)
+    sim = DeviceSim("moderate", seed=0)
+    plan = dp_partition(g, _sim_cost(sim), objective="edp")
+    assert set(np.unique(plan.alphas)) <= {0.0, 1.0}

@@ -1,0 +1,118 @@
+"""Sharding rules + HLO stats + small-mesh dry-run (subprocess)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.utils.hlo_cost import loop_aware_cost, parse_hlo
+from repro.utils.hlo_stats import collective_stats, total_collective_bytes
+
+TOY_HLO = """
+HloModule toy
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body.1 (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %d = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[8,128]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (x: f32[8,128]) -> f32[8,128] {
+  %x = f32[8,128]{1,0} parameter(0)
+  %c = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%c, %x)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %ag = f32[16,128]{1,0} all-gather(%x), dimensions={0}
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_stats_parses_result_types():
+    st = collective_stats(TOY_HLO)
+    assert st["all-reduce"]["count"] == 1
+    assert st["all-reduce"]["bytes"] == 8 * 128 * 4
+    assert st["all-gather"]["bytes"] == 16 * 128 * 4
+    assert total_collective_bytes(TOY_HLO) == 8 * 128 * 4 + 16 * 128 * 4
+
+
+def test_loop_aware_cost_multiplies_trip_counts():
+    t = loop_aware_cost(TOY_HLO)
+    # dot: 2*8*128*128 flops, x10 trips
+    assert t["flops"] == pytest.approx(10 * 2 * 8 * 128 * 128)
+    assert t["collectives"]["all-reduce"]["count"] == 10
+    assert t["collectives"]["all-gather"]["count"] == 1
+
+
+def test_param_spec_rules():
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    # 4-device mesh via explicit devices isn't available on 1-CPU test env;
+    # use a 1x1 mesh: every rule must degrade to replication (divisibility).
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.sharding.partition_specs import param_spec
+
+    # on a 1x1 mesh every dim "divides": wq shards its output dim on model
+    # (a 1-way shard == replication), input dim has no fsdp axes -> None
+    assert param_spec("stages/0/l0/attn/wq", (256, 512), mesh) == P(None, "model")
+    assert param_spec("stages/0/l0/attn/wq", (256, 511), mesh,
+                      model_axis=None) == P(None, None)
+    # and with a fake 16-way check through _maybe logic on divisible dims
+    spec = param_spec("stages/0/l0/mlp/w_gate", (4, 256, 512), mesh)
+    assert len(spec) == 3
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_subprocess():
+    """End-to-end dry-run on a 2x2 debug mesh in a subprocess (device-count
+    env must be set before jax import)."""
+    code = (
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=4';"
+        "import jax;"
+        "from repro.launch import dryrun as dr;"
+        "from repro.launch.mesh import make_debug_mesh;"
+        "m = make_debug_mesh(2, 2);"
+        "lowered, note = dr.build_lowered('tinyllama-1.1b','decode_32k',mesh=m);"
+        "c = lowered.compile();"
+        "stats = dr.analyse(lowered, c, 4);"
+        "assert stats['flops'] > 0, stats;"
+        "print('SUBPROC_OK', stats['flops'])"
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+                         timeout=570)
+    assert "SUBPROC_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_cache_shardings_rules():
+    import jax
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as model_lib
+    from repro.sharding.partition_specs import cache_shardings
+    import functools
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    cache_sds = jax.eval_shape(functools.partial(model_lib.init_cache, cfg, 2, 16))
+    sh = cache_shardings(cache_sds, cfg, mesh, 2)
+    assert len(jax.tree.leaves(sh)) == len(jax.tree.leaves(cache_sds))

@@ -1,0 +1,91 @@
+"""Training substrate: loss decreases, checkpoint roundtrip, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import OptConfig, adamw_update, global_norm, init_opt_state, schedule
+from repro.training.train_loop import train_loop
+
+
+def test_loss_decreases_tinyllama():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    data = SyntheticLM(cfg, DataConfig(batch=4, seq_len=64, seed=0))
+    params, _, hist = train_loop(cfg, params, data.batches(40),
+                                 oc=OptConfig(lr=1e-3, warmup_steps=5, total_steps=40),
+                                 log_every=0)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.5, (first, last)
+
+
+def test_loss_decreases_moe():
+    cfg = reduced(get_config("deepseek-v2-lite-16b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    data = SyntheticLM(cfg, DataConfig(batch=4, seq_len=32, seed=0))
+    params, _, hist = train_loop(cfg, params, data.batches(30),
+                                 oc=OptConfig(lr=1e-3, warmup_steps=5, total_steps=30),
+                                 log_every=0)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+
+
+def test_grad_clip():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 100.0)}
+    st = init_opt_state(params)
+    oc = OptConfig(clip_norm=1.0, lr=1.0, weight_decay=0.0)
+    _, _, m = adamw_update(params, grads, st, oc)
+    assert m["grad_norm"] > 1.0  # raw norm reported
+
+
+def test_schedule_warmup_and_decay():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(schedule(oc, 0)) < float(schedule(oc, 10))
+    assert float(schedule(oc, 99)) < float(schedule(oc, 12))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = reduced(get_config("gemma2-2b"))
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    opt = init_opt_state(params)
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params, opt, step=7)
+    (restored, step) = restore_checkpoint(path, {"params": params, "opt": opt}), None
+    tree, got_step = restored
+    assert got_step == 7
+    for a, b in zip(jax.tree.leaves(tree["params"]), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipeline_deterministic():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    d1 = SyntheticLM(cfg, DataConfig(batch=2, seq_len=16, seed=3)).batch(5)
+    d2 = SyntheticLM(cfg, DataConfig(batch=2, seq_len=16, seed=3)).batch(5)
+    np.testing.assert_array_equal(d1["tokens"], d2["tokens"])
+    d3 = SyntheticLM(cfg, DataConfig(batch=2, seq_len=16, seed=4)).batch(5)
+    assert not np.array_equal(d1["tokens"], d3["tokens"])
+
+
+def test_pipeline_has_learnable_structure():
+    """75% of transitions follow a fixed permutation — bigram accuracy of the
+    oracle predictor must be ~0.75, far above chance."""
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    pipe = SyntheticLM(cfg, DataConfig(batch=8, seq_len=256, seed=0))
+    b = pipe.batch(0)
+    pred = pipe.perm[b["tokens"]]
+    acc = (pred == b["labels"]).mean()
+    assert 0.6 < acc < 0.9, acc
+
+
+def test_enc_dec_batch_shapes():
+    cfg = reduced(get_config("seamless-m4t-medium"))
+    b = SyntheticLM(cfg, DataConfig(batch=2, seq_len=16, enc_frames=8)).batch(0)
+    assert b["enc_inputs"].shape == (2, 8, cfg.d_model)
