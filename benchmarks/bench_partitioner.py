@@ -1,14 +1,33 @@
-"""Partitioner benchmark: DP planning cost vs model depth, and the paper's
-incremental re-partitioning speedup (Challenge #2 — fast adaptation)."""
+"""Partitioner benchmark: DP planning cost vs model depth, the paper's
+incremental re-partitioning speedup (Challenge #2 — fast adaptation), and
+the vectorized planning fast path (lambda-batched sweep + cost-table cache).
+
+Emits ``name,us_per_call,derived`` CSV rows and writes a machine-readable
+``BENCH_partitioner.json`` with before/after planner timings. ``--smoke``
+(or ``main(smoke=True)``) runs a reduced matrix and ASSERTS the fast path:
+batched sweep >= 2x the scalar sweep on the big graphs, and bit-identical
+plans — so planning-cost regressions fail loudly in CI.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import DeviceSim, build_transformer_graph, build_yolo_graph
-from repro.core.partitioner import dp_partition, incremental_repartition
+from repro.core import DeviceSim, RuntimeEnergyProfiler, build_transformer_graph, build_yolo_graph
+from repro.core.partitioner import (
+    _dp_solve,
+    _dp_solve_batch,
+    _edge_costs,
+    _edp_sweep_lambdas,
+    dp_partition,
+    incremental_repartition,
+)
+from repro.core.simulator import DeviceState
+
+SMOKE_MIN_SPEEDUP = 2.0  # CI floor; real runs land well above 3x
 
 
 def _time(fn, reps=3):
@@ -20,29 +39,106 @@ def _time(fn, reps=3):
     return float(np.median(ts))
 
 
-def main(emit=print):
+def _graphs(smoke: bool):
+    gs = {
+        "yolo(9ops)": build_yolo_graph(),
+        "kimi(124ops)": build_transformer_graph(get_config("kimi-k2-1t-a32b"), 1, 2048),
+        "mamba2(130ops)": build_transformer_graph(get_config("mamba2-2.7b"), 1, 2048),
+    }
+    if not smoke:
+        gs["tinyllama(67ops)"] = build_transformer_graph(
+            get_config("tinyllama-1.1b"), 1, 2048)
+    return gs
+
+
+def main(emit=print, json_path="BENCH_partitioner.json", smoke=False):
     emit("name,us_per_call,derived")
+    reps = 1 if smoke else 3
     sim = DeviceSim("moderate", seed=0)
 
     def cost(op, a, p):
         return sim.exec_op(op, a, p)
 
-    graphs = {
-        "yolo(9ops)": build_yolo_graph(),
-        "tinyllama(67ops)": build_transformer_graph(get_config("tinyllama-1.1b"), 1, 2048),
-        "kimi(124ops)": build_transformer_graph(get_config("kimi-k2-1t-a32b"), 1, 2048),
-        "mamba2(130ops)": build_transformer_graph(get_config("mamba2-2.7b"), 1, 2048),
-    }
-    for name, g in graphs.items():
-        t_full = _time(lambda: dp_partition(g, cost, lam=1.0))
+    results = {"graphs": {}, "smoke": bool(smoke)}
+    graphs = _graphs(smoke)
+    big = []  # speedups on the >=100-op graphs (the regression gate)
+    for name, g in sorted(graphs.items()):
+        rec = {"ops": len(g)}
+        t_full = _time(lambda: dp_partition(g, cost, lam=1.0), reps)
         emit(f"dp_full_{name},{t_full*1e6:.0f},ops={len(g)}")
+        rec["dp_full_us"] = t_full * 1e6
+
         plan = dp_partition(g, cost, lam=1.0)
         seg = (len(g) // 3, len(g) // 3 + max(2, len(g) // 10))
-        t_inc = _time(lambda: incremental_repartition(g, plan, cost, seg, lam=1.0))
+        t_inc = _time(lambda: incremental_repartition(g, plan, cost, seg, lam=1.0), reps)
         emit(f"dp_incremental_{name},{t_inc*1e6:.0f},"
              f"segment={seg[1]-seg[0]+1}ops;speedup_vs_full={t_full/max(t_inc,1e-9):.2f}x")
-        t_edp = _time(lambda: dp_partition(g, cost, objective='edp'), reps=1)
-        emit(f"dp_edp_sweep_{name},{t_edp*1e6:.0f},lambda_sweep=13")
+        rec["dp_incremental_us"] = t_inc * 1e6
+
+        # ---- the lambda sweep itself: scalar reference vs batched fast path
+        tables = _edge_costs(g, cost)
+        lams = _edp_sweep_lambdas(tables, 12, vectorize=True)
+        t_scalar = _time(lambda: [_dp_solve(tables, float(l)) for l in lams], reps)
+        t_batch = _time(lambda: _dp_solve_batch(tables, lams), reps)
+        speedup = t_scalar / max(t_batch, 1e-12)
+        emit(f"dp_edp_sweep_scalar_{name},{t_scalar*1e6:.0f},lambda_sweep={len(lams)}")
+        emit(f"dp_edp_sweep_batched_{name},{t_batch*1e6:.0f},"
+             f"lambda_sweep={len(lams)};speedup={speedup:.2f}x")
+        rec["dp_edp_sweep_scalar_us"] = t_scalar * 1e6
+        rec["dp_edp_sweep_batched_us"] = t_batch * 1e6
+        rec["dp_edp_sweep_speedup"] = speedup
+        if len(g) >= 100:
+            big.append((name, speedup))
+
+        # ---- end-to-end EDP planning (includes table build) both ways
+        t_edp_v = _time(lambda: dp_partition(g, cost, objective="edp"), reps=1)
+        t_edp_s = _time(lambda: dp_partition(g, cost, objective="edp",
+                                             vectorize=False), reps=1)
+        emit(f"dp_edp_e2e_batched_{name},{t_edp_v*1e6:.0f},")
+        emit(f"dp_edp_e2e_scalar_{name},{t_edp_s*1e6:.0f},"
+             f"speedup={t_edp_s/max(t_edp_v,1e-12):.2f}x")
+        rec["dp_edp_e2e_batched_us"] = t_edp_v * 1e6
+        rec["dp_edp_e2e_scalar_us"] = t_edp_s * 1e6
+
+        # ---- plan equivalence: batched and scalar sweeps must agree exactly
+        pv = dp_partition(g, cost, objective="edp")
+        ps = dp_partition(g, cost, objective="edp", vectorize=False)
+        identical = (np.array_equal(pv.alphas, ps.alphas)
+                     and pv.pred_latency == ps.pred_latency
+                     and pv.pred_energy == ps.pred_energy)
+        rec["plans_identical"] = bool(identical)
+        emit(f"dp_edp_plans_identical_{name},,{identical}")
+        assert identical, f"batched vs scalar EDP plans diverge on {name}"
+
+        results["graphs"][name] = rec
+
+    # ---- warm cost-table cache: planner E2E with the profiler cost callable
+    g = graphs["kimi(124ops)"]
+    prof = RuntimeEnergyProfiler(use_gru=False, seed=0)
+    prof.offline_calibrate([g], n_samples=300 if smoke else 800, seed=0)
+    obs = DeviceState(1.49, 0.5, 0.79, 0.1)
+    fn = prof.cost_fn(obs)
+    t_cold = _time(lambda: (prof.table_cache.clear(),
+                            dp_partition(g, fn, objective="edp")), reps=1)
+    dp_partition(g, fn, objective="edp")  # warm it
+    t_warm = _time(lambda: dp_partition(g, fn, objective="edp"), reps)
+    emit(f"dp_edp_cold_table_cache,{t_cold*1e6:.0f},profiler_cost_fn")
+    emit(f"dp_edp_warm_table_cache,{t_warm*1e6:.0f},"
+         f"speedup={t_cold/max(t_warm,1e-12):.2f}x")
+    results["table_cache"] = {"cold_us": t_cold * 1e6, "warm_us": t_warm * 1e6,
+                              "speedup": t_cold / max(t_warm, 1e-12)}
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        emit(f"# wrote {json_path}")
+
+    if smoke:
+        for name, sp in big:
+            assert sp >= SMOKE_MIN_SPEEDUP, (
+                f"planning fast path regressed: dp_edp_sweep on {name} is only "
+                f"{sp:.2f}x the scalar reference (need >= {SMOKE_MIN_SPEEDUP}x)")
+    return results
 
 
 if __name__ == "__main__":

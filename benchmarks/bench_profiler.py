@@ -1,10 +1,72 @@
 """Profiler-accuracy benchmark: GBDT-only vs GBDT+GRU under device drift
-(the paper's Challenge #1 — runtime energy feedback quality)."""
+(the paper's Challenge #1 — runtime energy feedback quality), plus the
+vectorized feature-assembly fast path that feeds the DP partitioner.
+
+Writes ``BENCH_profiler.json`` with before/after feature-construction
+timings and the accuracy numbers."""
 from __future__ import annotations
+
+import json
+import time
 
 import numpy as np
 
 from repro.core import DeviceSim, RuntimeEnergyProfiler, build_yolo_graph
+from repro.core.opgraph import OP_TYPES, build_transformer_graph
+from repro.core.profiler import op_features, op_features_batch
+
+
+def _features_loop_reference(items, state):
+    """Pre-fast-path per-item construction (op_features + np.stack), kept as
+    the timing baseline for the vectorized path."""
+
+    def one(op, alpha, prev_alpha):
+        onehot = np.zeros(len(OP_TYPES))
+        onehot[OP_TYPES.index(op.op_type)] = 1.0
+        return np.concatenate([
+            [np.log1p(op.flops) / 25.0,
+             np.log1p(op.bytes_in + op.bytes_out) / 25.0,
+             np.log1p(op.weight_bytes) / 25.0,
+             alpha,
+             1.0 if 0.0 < alpha < 1.0 else 0.0,
+             abs(alpha - prev_alpha)],
+            onehot,
+            state.as_features(),
+        ])
+
+    return np.stack([one(op, a, p) for op, a, p in items])
+
+
+def feature_timing(n_items=3000, reps=3, seed=0):
+    """Time per-item vs vectorized feature assembly on a planner-sized batch."""
+    from repro.configs.base import get_config
+
+    g = build_transformer_graph(get_config("tinyllama-1.1b"), 1, 2048)
+    rng = np.random.default_rng(seed)
+    sim = DeviceSim("moderate", seed=seed)
+    idx = rng.integers(0, len(g), n_items)
+    alphas = rng.choice([0.0, 0.25, 0.5, 0.75, 1.0], n_items)
+    prevs = rng.choice([0.0, 0.5, 1.0], n_items)
+    items = [(g.nodes[int(i)], float(a), float(p))
+             for i, a, p in zip(idx, alphas, prevs)]
+    state = sim.state
+
+    def _t(fn):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    ops = [it[0] for it in items]
+    t_loop = _t(lambda: _features_loop_reference(items, state))
+    t_vec = _t(lambda: op_features_batch(ops, alphas, prevs, state))
+    X_loop = _features_loop_reference(items, state)
+    X_vec = op_features_batch(ops, alphas, prevs, state)
+    assert np.array_equal(X_loop, X_vec), "vectorized features diverge"
+    return {"n_items": n_items, "loop_us": t_loop * 1e6, "vectorized_us": t_vec * 1e6,
+            "speedup": t_loop / max(t_vec, 1e-12)}
 
 
 def run(workload="high", n_feedback=160, seed=0):
@@ -36,14 +98,31 @@ def run(workload="high", n_feedback=160, seed=0):
     return variants
 
 
-def main(emit=print):
+def main(emit=print, json_path="BENCH_profiler.json", smoke=False):
     emit("name,us_per_call,derived")
-    for workload in ("moderate", "high"):
-        v = run(workload)
-        emit(f"profiler_{workload}_gbdt_err,,median_rel_err={v['gbdt']:.4f}")
-        emit(f"profiler_{workload}_gbdt_gru_err,,median_rel_err={v['gbdt+gru']:.4f}")
-        emit(f"profiler_{workload}_gru_improvement,,pct={100*(1-v['gbdt+gru']/max(v['gbdt'],1e-9)):.1f}")
-    return v
+    results = {"smoke": bool(smoke)}
+    ft = feature_timing(n_items=1000 if smoke else 3000)
+    emit(f"features_loop,{ft['loop_us']:.0f},n={ft['n_items']}")
+    emit(f"features_vectorized,{ft['vectorized_us']:.0f},"
+         f"n={ft['n_items']};speedup={ft['speedup']:.2f}x")
+    results["feature_timing"] = ft
+    if not smoke:
+        results["accuracy"] = {}
+        for workload in ("moderate", "high"):
+            v = run(workload)
+            emit(f"profiler_{workload}_gbdt_err,,median_rel_err={v['gbdt']:.4f}")
+            emit(f"profiler_{workload}_gbdt_gru_err,,median_rel_err={v['gbdt+gru']:.4f}")
+            emit(f"profiler_{workload}_gru_improvement,,pct={100*(1-v['gbdt+gru']/max(v['gbdt'],1e-9)):.1f}")
+            results["accuracy"][workload] = v
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        emit(f"# wrote {json_path}")
+    if smoke:
+        assert ft["speedup"] >= 2.0, (
+            f"feature fast path regressed: only {ft['speedup']:.2f}x the "
+            "per-item reference (need >= 2x)")
+    return results
 
 
 if __name__ == "__main__":

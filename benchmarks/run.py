@@ -2,35 +2,64 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only fig2,profiler,partitioner,kernels,roofline]``
 Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke`` runs the fast planner sections only (partitioner + profiler) in
+a reduced matrix and ASSERTS the vectorized fast path — batched lambda
+sweeps must beat the scalar reference and produce bit-identical plans — so
+planning-cost regressions fail loudly (the test suite invokes this).
+``--json-dir`` controls where the ``BENCH_*.json`` artifacts are written.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig2,profiler,partitioner,kernels,roofline")
-    args = ap.parse_args()
-    sections = set(args.only.split(","))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated sections "
+                         "(fig2,profiler,partitioner,kernels,roofline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced planner-only run with loud fast-path asserts")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_*.json artifacts")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # smoke covers the planner sections; an explicit --only narrows it
+        sections = {"profiler", "partitioner"}
+        if args.only is not None:
+            sections &= set(args.only.split(","))
+            if not sections:
+                ap.error(f"--smoke only supports profiler,partitioner; "
+                         f"got --only {args.only}")
+    else:
+        sections = set((args.only or "fig2,profiler,partitioner,kernels,roofline")
+                       .split(","))
     t0 = time.time()
 
     def banner(s):
         print(f"# ---- {s} ----", flush=True)
+
+    os.makedirs(args.json_dir, exist_ok=True)
+
+    def jp(name):
+        return os.path.join(args.json_dir, name)
 
     if "fig2" in sections:
         banner("Fig.2: MACE-GPU vs CoDL vs AdaOper (latency + energy)")
         from benchmarks import bench_concurrent
         bench_concurrent.main()
     if "profiler" in sections:
-        banner("Profiler accuracy: GBDT vs GBDT+GRU under drift")
+        banner("Profiler accuracy + feature fast path")
         from benchmarks import bench_profiler
-        bench_profiler.main()
+        bench_profiler.main(json_path=jp("BENCH_profiler.json"), smoke=args.smoke)
     if "partitioner" in sections:
-        banner("Partitioner: DP cost + incremental re-partition speedup")
+        banner("Partitioner: DP cost, incremental speedup + batched sweep")
         from benchmarks import bench_partitioner
-        bench_partitioner.main()
+        bench_partitioner.main(json_path=jp("BENCH_partitioner.json"),
+                               smoke=args.smoke)
     if "kernels" in sections:
         banner("Pallas kernels (interpret-mode regression)")
         from benchmarks import bench_kernels

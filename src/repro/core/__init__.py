@@ -10,5 +10,11 @@ from repro.core.partitioner import (  # noqa: F401
     dp_partition,
     incremental_repartition,
 )
-from repro.core.profiler import RuntimeEnergyProfiler, op_features  # noqa: F401
+from repro.core.profiler import (  # noqa: F401
+    CostTableCache,
+    RuntimeEnergyProfiler,
+    op_features,
+    op_features_batch,
+    state_bucket,
+)
 from repro.core.simulator import CPU, GPU, PRESETS, DeviceSim, DeviceState  # noqa: F401

@@ -50,7 +50,15 @@ class AdaOperController:
         self.stats: Dict[str, TaskStats] = {}
 
     def _cost_fn(self, obs_state):
+        # the profiler cost callable carries its CostTableCache, so periodic
+        # replans of the same graph under an unchanged (state bucket,
+        # correction version) reuse the edge-cost tables instead of
+        # re-running the GBDT over every placement
         return self.profiler.cost_fn(obs_state)
+
+    def cache_stats(self) -> Dict[str, int]:
+        c = self.profiler.table_cache
+        return {"hits": c.hits, "misses": c.misses, "entries": len(c)}
 
     def plan(self, graph: OpGraph) -> PartitionPlan:
         obs = self.sim.observe()

@@ -113,6 +113,10 @@ class GBDTRegressor:
     subsample: float = 0.9
     log_target: bool = True  # energies span decades -> fit log1p
     seed: int = 0
+    # instrumentation: number of predict() invocations (each is one ensemble
+    # traversal over its batch). Planner caches are verified against this —
+    # a warm-cache schedule decision must not touch the trees at all.
+    n_predict_calls: int = 0
 
     _bin_edges: Optional[np.ndarray] = None
     _trees: List[_Tree] = field(default_factory=list)
@@ -161,6 +165,7 @@ class GBDTRegressor:
         return self
 
     def predict(self, X: np.ndarray) -> np.ndarray:
+        self.n_predict_calls += 1
         X = np.asarray(X, np.float64)
         Xb = self._bin(X)
         pred = np.full(Xb.shape[0], self._base)

@@ -17,7 +17,15 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
+
+OP_TYPES = ("conv", "matmul", "attention", "moe", "scan", "norm", "embed")
+
+# per-op feature block that does not depend on (alpha, prev_alpha, state):
+# [log flops, log io bytes, log weight bytes] + op-type one-hot
+STATIC_FEATURE_DIM = 3 + len(OP_TYPES)
 
 
 @dataclass
@@ -31,12 +39,37 @@ class OpNode:
     splittable: bool = True  # can be fractionally co-executed
     split_grain: int = 8  # number of equal shards the parallel dim allows
     comm_bytes_if_split: float = 0.0  # extra boundary bytes when split
+    # lazily-built caches (planner fast path); invalidated only by
+    # _invalidate_feature_cache() — op metadata is treated as immutable
+    # once the node enters a graph.
+    _feat_static: Optional[np.ndarray] = field(
+        default=None, repr=False, compare=False)
+
+    def static_features(self) -> np.ndarray:
+        """Cached (STATIC_FEATURE_DIM,) feature block for this op."""
+        f = self._feat_static
+        if f is None:
+            f = np.zeros(STATIC_FEATURE_DIM)
+            f[0] = np.log1p(self.flops) / 25.0
+            f[1] = np.log1p(self.bytes_in + self.bytes_out) / 25.0
+            f[2] = np.log1p(self.weight_bytes) / 25.0
+            f[3 + OP_TYPES.index(self.op_type)] = 1.0
+            self._feat_static = f
+        return f
+
+    def _invalidate_feature_cache(self) -> None:
+        """Clear ALL planner caches stored on this node: the static feature
+        block and the alpha-level grid the partitioner memoises here."""
+        self._feat_static = None
+        self._alpha_levels = None  # set lazily by partitioner._levels_for
 
 
 @dataclass
 class OpGraph:
     name: str
     nodes: List[OpNode] = field(default_factory=list)
+    _feat_matrix: Optional[np.ndarray] = field(
+        default=None, repr=False, compare=False)
 
     def total_flops(self) -> float:
         return sum(n.flops for n in self.nodes)
@@ -44,11 +77,22 @@ class OpGraph:
     def total_bytes(self) -> float:
         return sum(n.bytes_in + n.bytes_out + n.weight_bytes for n in self.nodes)
 
+    def static_feature_matrix(self) -> np.ndarray:
+        """Cached (n_ops, STATIC_FEATURE_DIM) stack of per-op feature blocks."""
+        if self._feat_matrix is None or len(self._feat_matrix) != len(self.nodes):
+            self._feat_matrix = (np.stack([n.static_features() for n in self.nodes])
+                                 if self.nodes else np.zeros((0, STATIC_FEATURE_DIM)))
+        return self._feat_matrix
+
+    def _invalidate_feature_cache(self) -> None:
+        """Clear the graph-level matrix and every node's planner caches —
+        call after mutating any op's metadata."""
+        self._feat_matrix = None
+        for n in self.nodes:
+            n._invalidate_feature_cache()
+
     def __len__(self):
         return len(self.nodes)
-
-
-OP_TYPES = ("conv", "matmul", "attention", "moe", "scan", "norm", "embed")
 
 
 # ---------------------------------------------------------------------------

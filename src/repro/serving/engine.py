@@ -15,6 +15,7 @@ work and does not affect the paper's claims.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -24,6 +25,7 @@ import numpy as np
 
 from repro.core.opgraph import build_transformer_graph
 from repro.core.partitioner import dp_partition
+from repro.core.profiler import state_bucket
 from repro.models import model as model_lib
 from repro.sharding.context import ExecContext
 
@@ -98,26 +100,87 @@ class AdaOperScheduler:
     """Energy-aware batch planner: for each candidate microbatch size,
     predict (latency, energy) of prefill+decode opgraphs with the profiler
     under the observed device state, DP-partition each, and pick the EDP
-    minimiser. Returns the plan so the runtime can apply it."""
+    minimiser. Returns the plan so the runtime can apply it.
+
+    Fast path: graphs are built once per (cfg, batch, length-bucket, kind)
+    and plans are memoised in an LRU keyed additionally by the quantized
+    device-state bucket and the profiler's correction version — so a warm
+    cache answers a schedule decision with zero cost-model evaluations,
+    and any drift feedback (version bump) or state move invalidates it.
+    """
 
     def __init__(self, profiler, sim, objective: str = "edp",
-                 candidate_batches=(1, 2, 4, 8)):
+                 candidate_batches=(1, 2, 4, 8), plan_cache_size: int = 256,
+                 graph_cache_size: int = 64):
         self.profiler = profiler
         self.sim = sim
         self.objective = objective
         self.candidates = candidate_batches
+        self.plan_cache_size = plan_cache_size
+        self.graph_cache_size = graph_cache_size
+        self._graph_cache: OrderedDict = OrderedDict()
+        self._plan_cache: OrderedDict = OrderedDict()
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
+
+    @staticmethod
+    def _len_bucket(n: int) -> int:
+        """Next power of two (min 16): nearby prompt lengths share graphs,
+        cost tables and cached plans."""
+        return max(16, 1 << (max(int(n), 1) - 1).bit_length())
+
+    def invalidate(self):
+        """Drop all memoised plans and graphs (drift-forced replan)."""
+        self._plan_cache.clear()
+        self._graph_cache.clear()
+
+    def _graph(self, cfg, batch: int, seq: int, kind: str):
+        key = (cfg.name, batch, seq, kind)
+        g = self._graph_cache.get(key)
+        if g is None:
+            g = self._graph_cache[key] = build_transformer_graph(cfg, batch, seq, kind=kind)
+        else:
+            self._graph_cache.move_to_end(key)
+        # LRU-bounded: varied (batch, seq) combinations must not leak graphs
+        # (each ~100 OpNodes with cached feature blocks) without limit
+        while len(self._graph_cache) > self.graph_cache_size:
+            self._graph_cache.popitem(last=False)
+        return g
+
+    def _candidates_for(self, n_waiting: int) -> List[int]:
+        n = max(n_waiting, 1)
+        cands = {c for c in self.candidates if c <= n}
+        # exact-fit candidate: 3 waiting with candidates (1,2,4) must be able
+        # to serve all 3 in one batch, not just 2
+        cands.add(min(n, max(self.candidates)))
+        return sorted(cands)
+
+    def _plan_pair(self, cfg, b: int, plen: int, max_new: int, cost_fn, cache_key):
+        key = (cfg.name, b, plen, max_new) + cache_key
+        ent = self._plan_cache.get(key)
+        if ent is not None:
+            self.plan_cache_hits += 1
+            self._plan_cache.move_to_end(key)
+            return ent
+        self.plan_cache_misses += 1
+        g_pre = self._graph(cfg, b, plen, "prefill")
+        g_dec = self._graph(cfg, b, plen + max_new, "decode")
+        ent = (dp_partition(g_pre, cost_fn, objective=self.objective),
+               dp_partition(g_dec, cost_fn, objective=self.objective))
+        self._plan_cache[key] = ent
+        while len(self._plan_cache) > self.plan_cache_size:
+            self._plan_cache.popitem(last=False)
+        return ent
 
     def choose(self, cfg, n_waiting: int, prompt_len: int, max_new: int):
         obs = self.sim.observe()
         cost_fn = self.profiler.cost_fn(obs)
+        cache_key = (state_bucket(obs), self.profiler.correction_version())
+        plen = self._len_bucket(prompt_len)
         best = None
-        for b in self.candidates:
-            if b > max(n_waiting, 1):
-                break
-            g_pre = build_transformer_graph(cfg, b, prompt_len, kind="prefill")
-            g_dec = build_transformer_graph(cfg, b, prompt_len + max_new, kind="decode")
-            plan_pre = dp_partition(g_pre, cost_fn, objective=self.objective)
-            plan_dec = dp_partition(g_dec, cost_fn, objective=self.objective)
+        for b in self._candidates_for(n_waiting):
+            plan_pre, plan_dec = self._plan_pair(cfg, b, plen, max_new,
+                                                 cost_fn, cache_key)
             lat = plan_pre.pred_latency + max_new * plan_dec.pred_latency
             en = plan_pre.pred_energy + max_new * plan_dec.pred_energy
             # normalise per request: energy-delay product per served request
@@ -150,7 +213,11 @@ class ServingEngine:
             return []
         w = self.workers[model]
         plen = len(q[0].prompt)
-        bucket = [r for r in q if len(r.prompt) == plen]
+        # one O(n) scan: collect the equal-length bucket and remember where
+        # its members sit so the post-batch rebuild is a single pass too
+        # (was: q.remove(r) per served request -> O(n^2) drain)
+        bucket_idx = [i for i, r in enumerate(q) if len(r.prompt) == plen]
+        bucket = [q[i] for i in bucket_idx]
         max_new = max(r.max_new_tokens for r in bucket)
         if self.scheduler is not None:
             choice = self.scheduler.choose(w.cfg, len(bucket), plen, max_new)
@@ -159,8 +226,8 @@ class ServingEngine:
             choice = {"energy": float("nan")}
             bsz = min(8, len(bucket))
         batch = bucket[:bsz]
-        for r in batch:
-            q.remove(r)
+        served = set(bucket_idx[:bsz])
+        self.queues[model] = [r for i, r in enumerate(q) if i not in served]
         prompts = np.stack([r.prompt for r in batch])
         enc = (np.stack([r.enc_inputs for r in batch])
                if batch[0].enc_inputs is not None else None)

@@ -1,0 +1,34 @@
+"""Planner benchmark smoke: ``benchmarks/run.py --smoke`` must pass its
+fast-path assertions (batched sweep speedup, bit-identical plans) and emit
+machine-readable JSON — so planning-cost regressions fail the suite."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_run_smoke_emits_json_and_asserts_fast_path(tmp_path, capsys):
+    from benchmarks import run as bench_run
+
+    bench_run.main(["--smoke", "--json-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert "dp_edp_sweep_batched_" in out
+
+    part = json.loads((tmp_path / "BENCH_partitioner.json").read_text())
+    prof = json.loads((tmp_path / "BENCH_profiler.json").read_text())
+
+    assert part["smoke"] is True
+    for name, rec in part["graphs"].items():
+        assert rec["plans_identical"], name
+        assert rec["dp_edp_sweep_scalar_us"] > 0
+        assert rec["dp_edp_sweep_batched_us"] > 0
+    big = {n: r for n, r in part["graphs"].items() if r["ops"] >= 100}
+    assert len(big) >= 2, "smoke must cover the 124-op and 130-op graphs"
+    for name, rec in big.items():
+        assert rec["dp_edp_sweep_speedup"] >= 2.0, (name, rec)
+    assert part["table_cache"]["speedup"] > 1.0
+
+    assert prof["feature_timing"]["speedup"] >= 2.0

@@ -3,6 +3,9 @@ import itertools
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis; "
+                    "tests/test_planner_fastpath.py covers the no-deps subset")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.opgraph import OpGraph, OpNode
