@@ -1,5 +1,7 @@
-"""Paper Fig. 2 reproduction: MACE-GPU vs CoDL vs AdaOper, YOLOv2,
-moderate + high workload conditions.
+"""Concurrent-serving benchmarks.
+
+Section 1 (``main``) — paper Fig. 2 reproduction: MACE-GPU vs CoDL vs
+AdaOper, YOLOv2, moderate + high workload conditions.
 
 Protocol (faithful to the paper's setup, simulator standing in for the
 Xiaomi 9's power rails — see DESIGN.md §2):
@@ -9,8 +11,21 @@ Xiaomi 9's power rails — see DESIGN.md §2):
   * AdaOper   : full closed loop — GBDT+GRU runtime profiler, EDP-objective
                 DP, drift-triggered incremental re-partitioning.
 Energy/latency are always *ground truth* from the device simulator.
+
+Section 2 (``serving``) — bucketed vs continuous serving engine on a
+mixed-length, mixed-``max_new_tokens`` request set (moderate preset):
+throughput, p95 latency and predicted energy per request, written to
+``BENCH_concurrent.json``. In smoke mode it asserts the continuous path is
+token-identical to the bucketed reference, >=1.3x throughput at <= the
+energy per request, and gates against the committed baseline JSON (the
+regression metric is the *relative* speedup, which transfers across
+machines; absolute tok/s does not).
 """
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import numpy as np
 
@@ -25,6 +40,17 @@ from repro.core import (
 
 N_INFER = 60
 SEEDS = (3, 11, 29)
+
+# serving workload (moderate preset): three prompt-length groups so the
+# bucketed reference fragments into three position-synchronous buckets, and
+# heterogeneous decode lengths so it pads every bucket to its slowest member
+N_REQUESTS = 12
+PROMPT_LENS = (12, 20, 28)
+MAX_NEW = (2, 12, 4, 6, 3, 8)
+MAX_SLOTS = 12
+MAX_LEN = 48
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baselines", "BENCH_concurrent.json")
 
 
 def run_system(system: str, workload: str, profiler, seed: int, n=N_INFER):
@@ -86,5 +112,112 @@ def main(emit=print):
     return rows
 
 
+def _workload(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(N_REQUESTS):
+        plen = PROMPT_LENS[i % len(PROMPT_LENS)]
+        reqs.append((i, rng.integers(1, cfg.vocab_size, plen, dtype=np.int32),
+                     MAX_NEW[i % len(MAX_NEW)]))
+    return reqs
+
+
+def _run_mode(mode, cfg, params, profiler, reqs):
+    from repro.serving.engine import AdaOperScheduler, Request, ServingEngine
+
+    sim = DeviceSim("moderate", seed=0)
+    eng = ServingEngine(scheduler=AdaOperScheduler(profiler, sim), mode=mode,
+                        max_slots=MAX_SLOTS)
+    eng.add_model("m", cfg, params, max_len=MAX_LEN)
+
+    def submit():
+        for uid, prompt, max_new in reqs:
+            eng.submit("m", Request(uid, prompt, max_new))
+
+    submit()
+    eng.run_all()  # warmup: jit compiles excluded from the measured pass
+    # reset counters so the measured record reflects the measured pass only
+    eng.preemptions = {k: 0 for k in eng.preemptions}
+    eng.drift_events = 0
+    eng.admission.log.clear()
+    submit()
+    t0 = time.time()
+    responses = eng.run_all()
+    wall = time.time() - t0
+    assert len(responses) == len(reqs)
+    tokens = {r.uid: np.asarray(r.tokens).tolist() for r in responses}
+    lats = np.array([r.latency_s for r in responses])
+    n_tok = sum(len(t) for t in tokens.values())
+    rec = {
+        "wall_s": wall,
+        "throughput_tok_s": n_tok / wall,
+        "p95_latency_s": float(np.percentile(lats, 95)),
+        "mean_energy_j_per_req": float(np.mean([r.energy_j_pred for r in responses])),
+        "responses": len(responses),
+        "generated_tokens": n_tok,
+    }
+    if mode == "continuous":
+        rec["preemptions"] = sum(eng.preemptions.values())
+        rec["admission_denials"] = sum(1 for d in eng.admission.log if not d["admit"])
+    return rec, tokens
+
+
+def serving(json_path=None, smoke=False, baseline_path=BASELINE_PATH, emit=print):
+    """Bucketed vs continuous serving on one mixed request set."""
+    import jax
+
+    from repro.core.opgraph import build_transformer_graph
+    from repro.configs.base import get_config, reduced
+    from repro.models import init_params
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    profiler = RuntimeEnergyProfiler(use_gru=False, seed=0)
+    profiler.offline_calibrate([build_transformer_graph(cfg, 4, 32)],
+                               n_samples=800 if smoke else 1500, seed=0)
+    reqs = _workload(cfg)
+
+    modes, tokens = {}, {}
+    for mode in ("bucketed", "continuous"):
+        modes[mode], tokens[mode] = _run_mode(mode, cfg, params, profiler, reqs)
+    speedup = modes["continuous"]["throughput_tok_s"] / modes["bucketed"]["throughput_tok_s"]
+    energy_ratio = (modes["continuous"]["mean_energy_j_per_req"]
+                    / modes["bucketed"]["mean_energy_j_per_req"])
+    out = {
+        "smoke": smoke,
+        "workload": {"preset": "moderate", "n_requests": N_REQUESTS,
+                     "prompt_lens": list(PROMPT_LENS), "max_new": list(MAX_NEW),
+                     "max_slots": MAX_SLOTS},
+        "modes": modes,
+        "throughput_speedup": speedup,
+        "energy_per_req_ratio": energy_ratio,
+        "tokens_identical": tokens["continuous"] == tokens["bucketed"],
+    }
+    for mode, rec in modes.items():
+        emit(f"serving_{mode}_throughput,,tok_s={rec['throughput_tok_s']:.1f};"
+             f"p95_ms={rec['p95_latency_s']*1e3:.1f};"
+             f"energy_mJ_per_req={rec['mean_energy_j_per_req']*1e3:.3f}")
+    emit(f"serving_continuous_vs_bucketed,,speedup={speedup:.2f};"
+         f"energy_ratio={energy_ratio:.3f};"
+         f"tokens_identical={out['tokens_identical']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    if smoke:
+        assert out["tokens_identical"], \
+            "continuous path diverged from the bucketed reference"
+        assert speedup >= 1.3, f"continuous speedup {speedup:.2f} < 1.3"
+        assert energy_ratio <= 1.0 + 1e-6, \
+            f"continuous energy/request {energy_ratio:.3f}x bucketed"
+        if baseline_path and os.path.exists(baseline_path):
+            base = json.loads(open(baseline_path).read())
+            floor = base["throughput_speedup"] * 0.8
+            assert speedup >= floor, \
+                (f"continuous speedup {speedup:.2f} regressed >20% vs "
+                 f"committed baseline {base['throughput_speedup']:.2f}")
+    return out
+
+
 if __name__ == "__main__":
     main()
+    serving()

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import DeviceSim, RuntimeEnergyProfiler, build_yolo_graph
 from repro.core.opgraph import OP_TYPES, build_transformer_graph
-from repro.core.profiler import op_features, op_features_batch
+from repro.core.profiler import op_features_batch
 
 
 def _features_loop_reference(items, state):

@@ -1,12 +1,17 @@
 """Benchmark entry point: one section per paper table/figure + system extras.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig2,profiler,partitioner,kernels,roofline]``
+``PYTHONPATH=src python -m benchmarks.run
+  [--only fig2,concurrent,profiler,partitioner,kernels,roofline]``
 Prints ``name,us_per_call,derived`` CSV.
 
-``--smoke`` runs the fast planner sections only (partitioner + profiler) in
-a reduced matrix and ASSERTS the vectorized fast path — batched lambda
-sweeps must beat the scalar reference and produce bit-identical plans — so
-planning-cost regressions fail loudly (the test suite invokes this).
+``--smoke`` runs the fast sections only (partitioner + profiler + the
+concurrent serving comparison) in a reduced matrix and ASSERTS the fast
+paths — batched lambda sweeps must beat the scalar reference with
+bit-identical plans, and the continuous serving engine must be
+token-identical to the bucketed reference at >=1.3x throughput with no
+>20% speedup regression against the committed baseline JSON
+(``benchmarks/baselines/BENCH_concurrent.json``) — so planning-cost and
+serving regressions fail loudly (the test suite invokes this).
 ``--json-dir`` controls where the ``BENCH_*.json`` artifacts are written.
 """
 from __future__ import annotations
@@ -15,27 +20,30 @@ import argparse
 import os
 import time
 
+SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent")
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated sections "
-                         "(fig2,profiler,partitioner,kernels,roofline)")
+                         "(fig2,concurrent,profiler,partitioner,kernels,roofline)")
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced planner-only run with loud fast-path asserts")
+                    help="reduced fast-section run with loud fast-path asserts")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_*.json artifacts")
     args = ap.parse_args(argv)
     if args.smoke:
-        # smoke covers the planner sections; an explicit --only narrows it
-        sections = {"profiler", "partitioner"}
+        # smoke covers the fast sections; an explicit --only narrows it
+        sections = set(SMOKE_SECTIONS)
         if args.only is not None:
             sections &= set(args.only.split(","))
             if not sections:
-                ap.error(f"--smoke only supports profiler,partitioner; "
+                ap.error(f"--smoke only supports {','.join(SMOKE_SECTIONS)}; "
                          f"got --only {args.only}")
     else:
-        sections = set((args.only or "fig2,profiler,partitioner,kernels,roofline")
+        sections = set((args.only or
+                        "fig2,concurrent,profiler,partitioner,kernels,roofline")
                        .split(","))
     t0 = time.time()
 
@@ -51,6 +59,11 @@ def main(argv=None) -> None:
         banner("Fig.2: MACE-GPU vs CoDL vs AdaOper (latency + energy)")
         from benchmarks import bench_concurrent
         bench_concurrent.main()
+    if "concurrent" in sections:
+        banner("Serving: bucketed vs continuous batching (throughput/p95/energy)")
+        from benchmarks import bench_concurrent
+        bench_concurrent.serving(json_path=jp("BENCH_concurrent.json"),
+                                 smoke=args.smoke)
     if "profiler" in sections:
         banner("Profiler accuracy + feature fast path")
         from benchmarks import bench_profiler

@@ -1,11 +1,17 @@
-"""Concurrent DNN serving with the energy-aware scheduler (paper setting:
-several models share one device/pod).
+"""Concurrent DNN serving with continuous batching + energy-aware admission
+(paper setting: several models share one device/pod).
 
-Two reduced LLMs serve interleaved request streams; the AdaOper scheduler
-picks per-batch microbatch sizes + partition plans from profiler predictions.
+Two reduced LLMs serve interleaved request streams with heterogeneous prompt
+lengths and decode budgets. The continuous engine admits and retires
+requests at token granularity against a preallocated slot-pool cache; the
+AdaOper admission policy consults the cached profiler/partitioner fast path
+each step and preempts the lowest-priority worker on drift events.
 
-Run:  PYTHONPATH=src python examples/concurrent_serving.py
+Run:  PYTHONPATH=src python examples/concurrent_serving.py [--steps N]
+      (--steps caps max_new_tokens per request; CI smokes with --steps 2)
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -15,26 +21,54 @@ from repro.models import init_params
 from repro.serving.engine import AdaOperScheduler, Request, ServingEngine
 
 MODELS = ["tinyllama-1.1b", "gemma2-2b"]
-cfgs = {m: reduced(get_config(m)) for m in MODELS}
+PROMPT_LENS = (12, 20, 28)
 
-profiler = RuntimeEnergyProfiler()
-profiler.offline_calibrate(
-    [build_transformer_graph(c, 4, 48) for c in cfgs.values()], n_samples=1200)
-sim = DeviceSim("moderate", seed=0)
-engine = ServingEngine(scheduler=AdaOperScheduler(profiler, sim))
 
-rng = np.random.default_rng(0)
-for name in MODELS:
-    cfg = cfgs[name]
-    engine.add_model(name, cfg, init_params(jax.random.PRNGKey(1), cfg), max_len=64)
-    for i in range(6):
-        engine.submit(name, Request(uid=i, max_new_tokens=6,
-                                    prompt=rng.integers(1, cfg.vocab_size, 24,
-                                                        dtype=np.int32)))
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=6,
+                    help="decode budget (max_new_tokens) per request")
+    ap.add_argument("--requests", type=int, default=6,
+                    help="requests per model")
+    args = ap.parse_args(argv)
 
-responses = engine.run_all()
-print(f"served {len(responses)} requests across {len(MODELS)} concurrent models")
-for name in MODELS:
-    for s in engine.stats[name]:
-        print(f"  {name:16s} batch={s['batch']} wall={s['wall_s']:.2f}s "
-              f"pred_energy={s['pred_energy_j']*1e3:.2f}mJ")
+    cfgs = {m: reduced(get_config(m)) for m in MODELS}
+    profiler = RuntimeEnergyProfiler(use_gru=False)
+    profiler.offline_calibrate(
+        [build_transformer_graph(c, 4, 48) for c in cfgs.values()], n_samples=1200)
+    sim = DeviceSim("moderate", seed=0)
+    engine = ServingEngine(scheduler=AdaOperScheduler(profiler, sim),
+                           mode="continuous", max_slots=4)
+
+    rng = np.random.default_rng(0)
+    for prio, name in enumerate(MODELS):
+        cfg = cfgs[name]
+        engine.add_model(name, cfg, init_params(jax.random.PRNGKey(1), cfg),
+                         max_len=64, priority=prio)
+        for i in range(args.requests):
+            plen = PROMPT_LENS[i % len(PROMPT_LENS)]
+            max_new = 1 + (i % args.steps) if args.steps > 1 else 1
+            engine.submit(name, Request(
+                uid=i, max_new_tokens=max_new,
+                prompt=rng.integers(1, cfg.vocab_size, plen, dtype=np.int32)))
+
+    responses = engine.run_all()
+    print(f"served {len(responses)} requests across {len(MODELS)} concurrent "
+          f"models ({engine.drift_events} drift events, "
+          f"{sum(engine.preemptions.values())} preemptions)")
+    for name in MODELS:
+        rounds = [s for s in engine.stats[name] if s.get("mode") == "continuous"]
+        admitted = sum(s["admitted"] for s in rounds)
+        retired = sum(s["retired"] for s in rounds)
+        peak = max((s["active"] + s["retired"] for s in rounds), default=0)
+        print(f"  {name:16s} rounds={len(rounds)} admitted={admitted} "
+              f"retired={retired} peak_active={peak}")
+    denials = sum(1 for d in engine.admission.log if not d["admit"])
+    print(f"admission decisions: {len(engine.admission.log)} "
+          f"({denials} deferred by the energy-aware policy)")
+    assert len(responses) == args.requests * len(MODELS)
+    return responses
+
+
+if __name__ == "__main__":
+    main()

@@ -6,8 +6,6 @@ plan migrate — and compare energy against the static CoDL-like plan.
 
 Run:  PYTHONPATH=src python examples/energy_adaptation.py
 """
-import numpy as np
-
 from repro.core import (
     AdaOperController,
     DeviceSim,

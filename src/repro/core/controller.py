@@ -15,7 +15,7 @@ engine reuses it for pod-level concurrent scheduling.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -31,6 +31,7 @@ class TaskStats:
     energies: List[float] = field(default_factory=list)
     repartitions: int = 0
     incremental: int = 0
+    drift_events: int = 0
 
     def totals(self) -> Tuple[float, float]:
         return float(np.sum(self.latencies)), float(np.sum(self.energies))
@@ -91,6 +92,8 @@ class AdaOperController:
         drifted = [i for i, d in enumerate(drifts) if d > self.drift_threshold]
         stats.latencies.append(lat)
         stats.energies.append(en)
+        if drifted:
+            stats.drift_events += 1
         # incremental re-partition of drifted segments (merged + halo)
         if drifted:
             obs2 = self.sim.observe()
@@ -124,8 +127,20 @@ class AdaOperController:
 
     # ----- concurrent workload driver -----
     def run_concurrent(self, graphs: List[OpGraph], iters: int = 50):
-        """Round-robin concurrent inference (paper's concurrent-DNN setting)."""
-        for it in range(iters):
-            for g in graphs:
-                self.run_inference(g)
+        """Round-robin concurrent inference (paper's concurrent-DNN setting).
+
+        Declares the co-execution level to the device simulator for the
+        duration: with several tasks resident, the shared staging bus is
+        time-shared and co-runners appear as background load, so the profiler
+        learns (and the partitioner plans against) contended physics — the
+        same contention model the serving engine's continuous scheduler runs
+        under."""
+        prev_coexec = self.sim.coexec
+        self.sim.set_coexec(len(graphs))
+        try:
+            for _ in range(iters):
+                for g in graphs:
+                    self.run_inference(g)
+        finally:
+            self.sim.set_coexec(prev_coexec)
         return {g.name: self.stats[g.name] for g in graphs}

@@ -80,7 +80,6 @@ class _Tree:
 
     def _pack(self):
         """Vectorised node arrays for batch predict."""
-        n = len(self.nodes)
         self._feat = np.array([x.feature for x in self.nodes], np.int32)
         self._thr = np.array([x.threshold_bin for x in self.nodes], np.int32)
         self._left = np.array([x.left for x in self.nodes], np.int32)

@@ -8,9 +8,8 @@ Trained online with Adam on a sliding replay buffer.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 
@@ -84,13 +84,24 @@ class DeviceSim:
         # feedback is exactly the GRU's job (paper Challenge #1).
         self._therm = 0.2
         self._recent_active = 0.0
+        # number of co-running model workers sharing the device. 1 = the
+        # single-task setting (unchanged physics); >1 models the serving
+        # engine's concurrent pools: the staging bus is time-shared and the
+        # co-runners show up as extra background load + heat.
+        self.coexec = 1
+
+    def set_coexec(self, n: int) -> None:
+        """Declare ``n`` concurrently-active model workers (>=1)."""
+        self.coexec = max(1, int(n))
 
     # ----- dynamics -----
     def step(self, dt_s: float = 0.05, active: float = 1.0):
         p, s, r = self.preset, self.state, self.rng
         vol = p["vol"]
-        # thermal integrator: sustained activity + bg load heat the die
-        target = min(1.0, 0.25 + 0.5 * active + 0.4 * s.cpu_bg)
+        # thermal integrator: sustained activity + bg load heat the die;
+        # co-running workers keep more silicon hot
+        target = min(1.0, 0.25 + 0.5 * active + 0.4 * s.cpu_bg
+                     + 0.06 * (self.coexec - 1))
         self._therm += 0.08 * (target - self._therm) + 0.01 * r.normal()
         self._therm = float(np.clip(self._therm, 0.0, 1.0))
         # OU pull toward preset mean + noise; clamp to spec range
@@ -141,14 +152,19 @@ class DeviceSim:
         """Execute op with fraction ``alpha`` on GPU, ``1-alpha`` on CPU.
         Returns (latency_s, energy_j) under the (true) device state."""
         s = state or self.state
+        # concurrent model workers: co-runners act as extra background load on
+        # both processor classes, and the CPU<->GPU staging bus is time-shared
+        cx = self.coexec
+        cpu_bg = min(0.99, s.cpu_bg + 0.05 * (cx - 1))
+        gpu_bg = min(0.95, s.gpu_bg + 0.05 * (cx - 1))
         bytes_a = alpha * (op.bytes_in + op.bytes_out + op.weight_bytes)
         bytes_b = (1 - alpha) * (op.bytes_in + op.bytes_out + op.weight_bytes)
-        t_gpu = self._class_time(GPU, s.gpu_f, s.gpu_bg, alpha * op.flops, bytes_a) if alpha > 0 else 0.0
-        t_cpu = self._class_time(CPU, s.cpu_f, s.cpu_bg, (1 - alpha) * op.flops, bytes_b) if alpha < 1 else 0.0
+        t_gpu = self._class_time(GPU, s.gpu_f, gpu_bg, alpha * op.flops, bytes_a) if alpha > 0 else 0.0
+        t_cpu = self._class_time(CPU, s.cpu_f, cpu_bg, (1 - alpha) * op.flops, bytes_b) if alpha < 1 else 0.0
         split = 0.0 < alpha < 1.0
         # boundary traffic: repartition between consecutive ops + co-exec halo
         move = abs(alpha - prev_alpha) * op.bytes_in + (op.comm_bytes_if_split * 0.5 if split else 0.0)
-        t_bus = move / (BUS_GBPS * 1e9)
+        t_bus = move / (BUS_GBPS * 1e9 / cx)
         lat = max(t_gpu, t_cpu) + t_bus + (SYNC_OVERHEAD_S if split else 0.0)
         e = 0.0
         if alpha > 0:

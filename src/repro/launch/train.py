@@ -11,7 +11,6 @@ import numpy as np
 from repro.configs.base import get_config, reduced as make_reduced
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_params
-from repro.sharding.context import ExecContext
 from repro.training.checkpoint import save_checkpoint
 from repro.training.optimizer import OptConfig
 from repro.training.train_loop import train_loop

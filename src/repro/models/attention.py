@@ -29,14 +29,22 @@ _KV_BLOCK = 1024
 
 
 def _mask(qpos, kpos, causal, window, kv_len):
-    """qpos (Sq,), kpos (Sk,) absolute positions -> (Sq, Sk) bool keep-mask."""
-    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    """qpos (Sq,) or (B,Sq), kpos (Sk,) absolute positions; kv_len scalar or
+    (B,). Returns a bool keep-mask of shape (Sq,Sk) — or (B,Sq,Sk) when any
+    input carries a per-sequence batch dim (the ragged continuous-batching
+    decode path, where every slot has its own write position)."""
+    qp = jnp.asarray(qpos)[..., :, None]  # (...,Sq,1)
+    kp = jnp.asarray(kpos)  # (Sk,)
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
     if causal:
-        m &= kpos[None, :] <= qpos[:, None]
+        m &= kp <= qp
     if window is not None:
-        m &= (qpos[:, None] - kpos[None, :]) < window
+        m &= (qp - kp) < window
     if kv_len is not None:
-        m &= kpos[None, :] < kv_len
+        kl = jnp.asarray(kv_len)
+        if kl.ndim:
+            kl = kl[:, None, None]  # (B,) -> (B,1,1)
+        m &= kp < kl
     return m
 
 
@@ -50,10 +58,12 @@ def full_attention(q, k, v, *, causal=True, window=None, softcap=None,
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32), k.astype(jnp.float32)) * scale
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
-    qpos = q_offset + jnp.arange(Sq)
+    qoff = jnp.asarray(q_offset)
+    qpos = (qoff[..., None] if qoff.ndim else qoff) + jnp.arange(Sq)
     kpos = jnp.arange(Sk)
     m = _mask(qpos, kpos, causal, window, kv_len)
-    s = jnp.where(m[None, None, None], s, -1e30)
+    m = m[:, None, None] if m.ndim == 3 else m[None, None, None]
+    s = jnp.where(m, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
@@ -80,7 +90,8 @@ def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,
     kb = k.reshape(B, nb, block, Hkv, Dk).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(B, nb, block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
     qf = q.astype(jnp.float32)
-    qpos = q_offset + jnp.arange(Sq)
+    qoff = jnp.asarray(q_offset)
+    qpos = (qoff[..., None] if qoff.ndim else qoff) + jnp.arange(Sq)
     eff_len = jnp.minimum(kv_len, Sk) if kv_len is not None else Sk
 
     def body(carry, xs):
@@ -93,7 +104,8 @@ def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,
             s = softcap * jnp.tanh(s / softcap)
         kpos = j0 + jnp.arange(block)
         keep = _mask(qpos, kpos, causal, window, eff_len)
-        s = jnp.where(keep[None, None], s, -1e30)
+        keep = keep[:, None] if keep.ndim == 3 else keep[None, None]
+        s = jnp.where(keep, s, -1e30)
         m_new = jnp.maximum(m_run, s.max(axis=-1))
         corr = jnp.exp(m_run - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -197,11 +209,25 @@ def gqa_forward(p, x, cfg, *, window=None, impl="xla", ctx=None):
 
 
 def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, window=None, impl="xla"):
-    """One-token decode. x (B,1,D); cache_k/v (B,Smax,Hkv,Dh); pos (scalar or (B,))."""
+    """One-token decode. x (B,1,D); cache_k/v (B,Smax,Hkv,Dh).
+
+    ``pos`` is either a scalar (position-synchronous batch, the bucketed
+    serving path) or a (B,) vector of per-sequence write positions (the
+    ragged continuous-batching path, where every cache slot sits at its own
+    depth). The vector path scatters each row's K/V at its own position and
+    masks attention per row with kv_len = pos+1."""
     B = x.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1), (B, 1))
+    pos = jnp.asarray(pos)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
     q, k, v = _project_qkv(p, x, cfg, positions)
-    idx = jnp.asarray(pos).reshape(())
+    if pos.ndim:  # ragged: per-slot positions
+        bidx = jnp.arange(B)
+        cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype), mode="drop")
+        o = attend(q, cache_k, cache_v, causal=False, window=window,
+                   softcap=cfg.attn_softcap, q_offset=pos, kv_len=pos + 1, impl=impl)
+        return o.reshape(B, 1, cfg.q_dim) @ p["wo"], (cache_k, cache_v)
+    idx = pos.reshape(())
     cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), idx, axis=1)
     cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), idx, axis=1)
     o = attend(q, cache_k, cache_v, causal=False, window=window,
@@ -284,14 +310,22 @@ def mla_forward(p, x, cfg, impl="xla"):
 
 
 def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, impl="xla"):
-    """Absorbed decode: scores & values live in the kv_lora latent space."""
+    """Absorbed decode: scores & values live in the kv_lora latent space.
+    ``pos`` scalar or (B,) per-slot positions (see ``gqa_decode``)."""
     B = x.shape[0]
     H, nope, vd, lr = cfg.num_heads, cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
-    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1), (B, 1))
+    pos = jnp.asarray(pos)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
     c_kv, k_rope = _mla_compress(p, x, cfg, positions)
-    idx = jnp.asarray(pos).reshape(())
-    cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_kv.astype(cache_ckv.dtype), idx, axis=1)
-    cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, k_rope.astype(cache_krope.dtype), idx, axis=1)
+    if pos.ndim:  # ragged: per-slot positions
+        bidx = jnp.arange(B)
+        cache_ckv = cache_ckv.at[bidx, pos].set(c_kv[:, 0].astype(cache_ckv.dtype), mode="drop")
+        cache_krope = cache_krope.at[bidx, pos].set(k_rope[:, 0].astype(cache_krope.dtype), mode="drop")
+        idx = pos
+    else:
+        idx = pos.reshape(())
+        cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_kv.astype(cache_ckv.dtype), idx, axis=1)
+        cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, k_rope.astype(cache_krope.dtype), idx, axis=1)
     q_nope, q_rope = _mla_queries(p, x, cfg, positions)
     w_uk = p["w_ukv"][..., :nope]  # (lr, H, nope)
     # absorb: q' = q_nope @ W_uk^T  -> latent-space queries (B,1,H,lr)

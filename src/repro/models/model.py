@@ -66,7 +66,6 @@ def train_logits(params, cfg, batch, ctx=ExecContext()):
 def loss_fn(params, cfg, batch, ctx=ExecContext()):
     logits, aux = train_logits(params, cfg, batch, ctx)
     labels = batch["labels"]
-    V = logits.shape[-1]
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     nll = (lse - gold).mean()
@@ -78,6 +77,17 @@ def init_cache(cfg, batch, max_len, enc_len=0):
     dtype = jnp.dtype(cfg.dtype)
     return tfm.init_stack_cache(cfg, batch, max_len, dtype,
                                 decoder_cross=cfg.is_encoder_decoder, enc_len=enc_len)
+
+
+def write_cache_slot(pool_cache, one_cache, slot):
+    """Copy a single-sequence cache (batch=1) into row ``slot`` of a slot-pool
+    cache (batch=max_slots). Every cache leaf is (repeats, batch, ...) per
+    stage, so one dynamic-slice update on axis 1 covers KV, SSM conv/state
+    and cross-attention leaves alike. ``slot`` may be a traced scalar."""
+    return jax.tree.map(
+        lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=1),
+        pool_cache, one_cache)
 
 
 def prefill(params, cfg, inputs, cache, ctx=ExecContext(), enc_inputs=None):
@@ -94,7 +104,8 @@ def prefill(params, cfg, inputs, cache, ctx=ExecContext(), enc_inputs=None):
 
 
 def decode_step(params, cfg, token, cache, pos, ctx=ExecContext()):
-    """token (B,1) int32; pos scalar int32 (current write position)."""
+    """token (B,1) int32; pos scalar int32 (position-synchronous batch) or
+    (B,) int32 per-sequence write positions (ragged continuous batching)."""
     x = embed_tokens(params["embed"], token, cfg).astype(jnp.dtype(cfg.dtype))
     x, _, cache = tfm.apply_stack(params["stages"], cfg, x, ctx, mode="decode",
                                   cache=cache, pos=pos)

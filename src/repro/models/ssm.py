@@ -24,7 +24,6 @@ def _causal_conv(x, w, b):
 
 def _conv_step(state, x_new, w, b):
     """state (B,W-1,C) raw inputs; x_new (B,C). Returns (y (B,C), new_state)."""
-    W = w.shape[1]
     full = jnp.concatenate([state, x_new[:, None, :]], axis=1)  # (B,W,C)
     y = jnp.einsum("bwc,cw->bc", full, w) + b
     return y, full[:, 1:, :]
@@ -252,7 +251,6 @@ def mamba1_forward(p, xin, cfg):
 
 
 def mamba1_decode(p, xin, cfg, conv_state, ssm_state):
-    B = xin.shape[0]
     di, N = cfg.d_inner, cfg.ssm_d_state
     rank = _dt_rank(cfg)
     xz = (xin @ p["in_proj"])[:, 0]

@@ -8,16 +8,24 @@ consults the runtime energy profiler + DP partitioner to pick, per batch,
 and to the device-simulator plan in the paper experiments) and (b) the
 microbatch size that minimises predicted energy-delay product.
 
-Limitation (documented): batches are position-synchronous — requests are
-grouped into equal-prompt-length buckets; continuous batching is future
-work and does not affect the paper's claims.
+Two serving modes (see docs/serving.md):
+
+  * ``continuous`` (default) — Orca-style iteration-level scheduling: a
+    per-step admission loop joins/retires requests at token granularity
+    against a preallocated slot-pool cache (``SlotAllocator`` rows + ragged
+    per-slot decode positions), with an energy-aware ``AdmissionPolicy``
+    that consults the cached profiler/partitioner fast path each step, and
+    drift-triggered preemption of the lowest-priority model worker.
+  * ``bucketed`` — the position-synchronous reference implementation
+    (requests grouped into equal-prompt-length buckets), kept behind the
+    flag the way ``vectorize=False`` keeps the scalar DP.
 """
 from __future__ import annotations
 
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +44,7 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 16
     enc_inputs: Optional[np.ndarray] = None
+    t_submit: float = 0.0  # stamped by ServingEngine.submit
 
 
 @dataclass
@@ -44,6 +53,41 @@ class Response:
     tokens: np.ndarray
     latency_s: float
     energy_j_pred: float
+
+
+class SlotAllocator:
+    """Fixed pool of cache rows for continuous batching. O(1) alloc/free,
+    LIFO reuse so the most-recently-retired row (hottest in cache) is handed
+    out first. Double-free and foreign-slot frees raise."""
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        self.n_slots = n_slots
+        self._free = list(range(n_slots - 1, -1, -1))
+        self._in_use: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._in_use)
+
+    def alloc(self) -> Optional[int]:
+        """Returns a free slot index, or None when the pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._in_use.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._in_use:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._in_use.remove(slot)
+        self._free.append(slot)
 
 
 class ModelWorker:
@@ -56,6 +100,7 @@ class ModelWorker:
         self.ctx = ctx
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._write = jax.jit(model_lib.write_cache_slot, donate_argnums=(0,))
 
     def _prefill_impl(self, params, cache, tokens, enc_inputs=None):
         logits, cache = model_lib.prefill(params, self.cfg, tokens, cache, self.ctx,
@@ -95,6 +140,32 @@ class ModelWorker:
             return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         return jax.random.categorical(rng, logits / temperature)[:, None].astype(jnp.int32)
 
+    # ---- continuous-batching primitives (slot-pool cache) ----
+
+    def init_pool(self, max_slots: int):
+        """Preallocated KV/state cache with one row per request slot."""
+        return model_lib.init_cache(self.cfg, max_slots, self.max_len)
+
+    def prefill_one(self, prompt: np.ndarray):
+        """Prefill a single request at its exact length. Returns
+        (last-position logits (1,V), batch-1 cache to scatter into a slot)."""
+        cache = model_lib.init_cache(self.cfg, 1, self.max_len)
+        return self._prefill(self.params, cache, jnp.asarray(prompt[None]))
+
+    def write_slot(self, pool_cache, one_cache, slot: int):
+        return self._write(pool_cache, one_cache, slot)
+
+    def decode_pool(self, pool_cache, tokens: np.ndarray, pos: np.ndarray):
+        """One ragged decode step over the whole slot pool. ``tokens``
+        (max_slots,1) int32, ``pos`` (max_slots,) int32 per-slot write
+        positions. Reuses the jitted decode body — a (B,) position vector
+        traces the ragged path in the model. Returns (greedy next tokens
+        (max_slots,) np.int32, cache)."""
+        logits, pool_cache = self._decode(self.params, pool_cache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(pos, dtype=jnp.int32))
+        return np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)), pool_cache
+
 
 class AdaOperScheduler:
     """Energy-aware batch planner: for each candidate microbatch size,
@@ -129,6 +200,13 @@ class AdaOperScheduler:
         cost tables and cached plans."""
         return max(16, 1 << (max(int(n), 1) - 1).bit_length())
 
+    @staticmethod
+    def _new_bucket(n: int) -> int:
+        """Next power of two (min 1) for decode-length horizons: the
+        continuous engine's remaining-token envelope shrinks every step and
+        must not generate a fresh plan-cache key each time."""
+        return 1 << (max(int(n), 1) - 1).bit_length()
+
     def invalidate(self):
         """Drop all memoised plans and graphs (drift-forced replan)."""
         self._plan_cache.clear()
@@ -155,22 +233,60 @@ class AdaOperScheduler:
         cands.add(min(n, max(self.candidates)))
         return sorted(cands)
 
-    def _plan_pair(self, cfg, b: int, plen: int, max_new: int, cost_fn, cache_key):
-        key = (cfg.name, b, plen, max_new) + cache_key
+    def _plan_one(self, cfg, b: int, seq: int, kind: str, cost_fn, cache_key):
+        """One cached DP solve for a (batch, seq, kind) graph. Prefill and
+        decode entries are cached independently so the continuous engine's
+        per-step decode refresh after a drift event never re-solves the
+        prefill graph (and decode entries are shared across every
+        (prompt-bucket, horizon-bucket) pair summing to the same length)."""
+        key = (cfg.name, b, seq, kind) + cache_key
         ent = self._plan_cache.get(key)
         if ent is not None:
             self.plan_cache_hits += 1
             self._plan_cache.move_to_end(key)
             return ent
         self.plan_cache_misses += 1
-        g_pre = self._graph(cfg, b, plen, "prefill")
-        g_dec = self._graph(cfg, b, plen + max_new, "decode")
-        ent = (dp_partition(g_pre, cost_fn, objective=self.objective),
-               dp_partition(g_dec, cost_fn, objective=self.objective))
+        g = self._graph(cfg, b, seq, kind)
+        ent = dp_partition(g, cost_fn, objective=self.objective)
         self._plan_cache[key] = ent
         while len(self._plan_cache) > self.plan_cache_size:
             self._plan_cache.popitem(last=False)
         return ent
+
+    def _plan_pair(self, cfg, b: int, plen: int, max_new: int, cost_fn, cache_key):
+        return (self._plan_one(cfg, b, plen, "prefill", cost_fn, cache_key),
+                self._plan_one(cfg, b, plen + max_new, "decode", cost_fn, cache_key))
+
+    def step_plan(self, cfg, batch: int, seq_len: int, max_new: int):
+        """Per-iteration plan for an active pool of ``batch`` slots whose
+        sequences fit the ``seq_len`` bucket — the continuous engine's
+        admission/accounting query: the decode-step plan only. Batch and
+        decode horizon are both power-of-two bucketed (like CUDA-graph batch
+        buckets in production engines) so a drift epoch needs only a handful
+        of DP solves; the returned ``batch`` is the bucketed value —
+        normalise per-request energy by it. Served from the plan cache when
+        warm, so a steady-state admission decision costs zero GBDT
+        traversals."""
+        obs = self.sim.observe()
+        cost_fn = self.profiler.cost_fn(obs)
+        cache_key = (state_bucket(obs), self.profiler.correction_version())
+        b = self._new_bucket(batch)
+        seq = self._len_bucket(seq_len) + self._new_bucket(max_new)
+        plan_dec = self._plan_one(cfg, b, seq, "decode", cost_fn, cache_key)
+        return {"batch": b,
+                "step_latency": plan_dec.pred_latency,
+                "step_energy": plan_dec.pred_energy}
+
+    def prefill_plan(self, cfg, batch: int, seq_len: int):
+        """Cached prefill plan for an admission (batch is pow2-bucketed)."""
+        obs = self.sim.observe()
+        cost_fn = self.profiler.cost_fn(obs)
+        cache_key = (state_bucket(obs), self.profiler.correction_version())
+        b = self._new_bucket(batch)
+        plan = self._plan_one(cfg, b, self._len_bucket(seq_len), "prefill",
+                              cost_fn, cache_key)
+        return {"batch": b, "latency": plan.pred_latency,
+                "energy": plan.pred_energy}
 
     def choose(self, cfg, n_waiting: int, prompt_len: int, max_new: int):
         obs = self.sim.observe()
@@ -191,19 +307,110 @@ class AdaOperScheduler:
         return best
 
 
+class AdmissionPolicy:
+    """Energy-aware iteration-level admission (the AdaOper objective applied
+    at token granularity): admit a waiting request into the slot pool only
+    when the profiler/partitioner fast path predicts the per-request
+    energy-delay product of a decode step does not worsen, and the added
+    step latency does not push the pool past the SLO. A starvation guard
+    admits regardless once the request's queueing delay exceeds the SLO,
+    and an empty pool always admits (idle silicon costs leakage only)."""
+
+    def __init__(self, scheduler: Optional[AdaOperScheduler] = None,
+                 slo_s: Optional[float] = None, edp_slack: float = 1.05):
+        self.scheduler = scheduler
+        self.slo_s = slo_s
+        self.edp_slack = edp_slack
+        self.log: List[dict] = []
+
+    def decide(self, cfg, n_active: int, seq_len: int, max_new: int,
+               wait_s: float, plan_fn=None) -> Tuple[bool, str]:
+        """``plan_fn(batch)`` overrides the plan source (the engine passes
+        its drift-scoped memo so steady-state decisions cost dict lookups)."""
+        if self.scheduler is None:
+            return True, "no-scheduler"
+        if n_active == 0:
+            return True, "idle-pool"
+        if self.slo_s is not None and wait_s > self.slo_s:
+            return True, "slo-starvation"
+        if plan_fn is None:
+            plan_fn = lambda b: self.scheduler.step_plan(cfg, b, seq_len, max_new)  # noqa: E731
+        cur = plan_fn(n_active)
+        new = plan_fn(n_active + 1)
+        # per-request EDP of one decode step: latency is shared by the actual
+        # batch, energy scales ~linearly with the plan's (bucketed) batch
+        edp_cur = (cur["step_latency"] / n_active) * (cur["step_energy"] / cur["batch"])
+        edp_new = (new["step_latency"] / (n_active + 1)) * (new["step_energy"] / new["batch"])
+        if self.slo_s is not None and new["step_latency"] * max_new > self.slo_s:
+            return False, "slo-violation"
+        if edp_new <= edp_cur * self.edp_slack:
+            return True, "edp-improves"
+        return False, "edp-worsens"
+
+    def _record(self, admit: bool, reason: str, n_active: int, uid) -> None:
+        self.log.append({"admit": admit, "reason": reason,
+                         "n_active": n_active, "uid": uid})
+
+
+@dataclass
+class _ActiveSeq:
+    """A request resident in a cache slot."""
+    req: Request
+    slot: int
+    pos: int  # next cache write position (prompt_len + generated so far)
+    tokens: List[int] = field(default_factory=list)
+    energy_j: float = 0.0
+
+
+class _SlotPool:
+    """Per-model continuous-batching state: the slot cache + allocator plus
+    the dense (max_slots,) token/position arrays fed to the ragged decode."""
+
+    def __init__(self, worker: ModelWorker, max_slots: int):
+        self.cache = worker.init_pool(max_slots)
+        self.alloc = SlotAllocator(max_slots)
+        self.active: Dict[int, _ActiveSeq] = {}
+        self.tokens = np.zeros((max_slots, 1), np.int32)
+        self.pos = np.zeros(max_slots, np.int32)
+
+
 class ServingEngine:
-    def __init__(self, scheduler: Optional[AdaOperScheduler] = None):
+    """``mode="continuous"`` (default) serves at token granularity;
+    ``mode="bucketed"`` keeps the position-synchronous reference path."""
+
+    def __init__(self, scheduler: Optional[AdaOperScheduler] = None,
+                 mode: str = "continuous", max_slots: int = 8,
+                 slo_s: Optional[float] = None):
+        if mode not in ("continuous", "bucketed"):
+            raise ValueError(f"unknown serving mode {mode!r}")
         self.workers: Dict[str, ModelWorker] = {}
         self.queues: Dict[str, List[Request]] = {}
         self.scheduler = scheduler
         self.stats: Dict[str, list] = {}
+        self.mode = mode
+        self.max_slots = max_slots
+        self.admission = AdmissionPolicy(scheduler, slo_s=slo_s)
+        self.pools: Dict[str, _SlotPool] = {}
+        self.priorities: Dict[str, int] = {}
+        self.preemptions: Dict[str, int] = {}
+        self.drift_events = 0
+        # step plans memoised between drift events: iteration-level
+        # scheduling consults the planner every step, so steady-state
+        # admission/accounting must cost dict lookups, not DP solves
+        self._plan_memo: Dict = {}
+        self._drift_ref = None
 
-    def add_model(self, name, cfg, params, max_len=512, ctx=ExecContext()):
+    def add_model(self, name, cfg, params, max_len=512, ctx=ExecContext(),
+                  priority: int = 0):
         self.workers[name] = ModelWorker(name, cfg, params, max_len, ctx)
         self.queues[name] = []
         self.stats[name] = []
+        self.priorities[name] = priority
+        self.preemptions[name] = 0
 
     def submit(self, model: str, req: Request):
+        if req.t_submit == 0.0:
+            req.t_submit = time.time()
         self.queues[model].append(req)
 
     def step(self, model: str, temperature: float = 0.0) -> List[Response]:
@@ -226,6 +433,9 @@ class ServingEngine:
             choice = {"energy": float("nan")}
             bsz = min(8, len(bucket))
         batch = bucket[:bsz]
+        # decode only as deep as the served batch actually needs — a long
+        # request left in the bucket must not pad this batch's horizon
+        max_new = max(r.max_new_tokens for r in batch)
         served = set(bucket_idx[:bsz])
         self.queues[model] = [r for i, r in enumerate(q) if i not in served]
         prompts = np.stack([r.prompt for r in batch])
@@ -236,14 +446,212 @@ class ServingEngine:
         dt = time.time() - t0
         self.stats[model].append({"batch": bsz, "wall_s": dt,
                                   "pred_energy_j": choice["energy"]})
-        return [Response(r.uid, toks[i, : r.max_new_tokens], dt, choice["energy"])
+        # predicted batch energy is shared by the requests it served
+        per_req_energy = choice["energy"] / bsz
+        return [Response(r.uid, toks[i, : r.max_new_tokens], dt, per_req_energy)
                 for i, r in enumerate(batch)]
+
+    # ------------------------------------------------------------------
+    # continuous batching (iteration-level scheduling)
+    # ------------------------------------------------------------------
+
+    # hysteresis thresholds for drift events, sized ~4 sigma above the
+    # resource monitor's observation noise: genuine governor moves and
+    # background bursts trip them, per-observation flicker does not
+    _DRIFT_CPU_F = 0.15
+    _DRIFT_GPU_F = 0.06
+    _DRIFT_BG = 0.12
+
+    def _plan_for(self, model: str, batch: int, seq_len: int, max_new: int):
+        """Step plan served from the drift-scoped memo (see __init__)."""
+        sch = self.scheduler
+        key = (model, sch._new_bucket(batch), sch._len_bucket(seq_len),
+               sch._new_bucket(max_new))
+        plan = self._plan_memo.get(key)
+        if plan is None:
+            plan = self._plan_memo[key] = sch.step_plan(
+                self.workers[model].cfg, batch, seq_len, max_new)
+        return plan
+
+    def _prefill_plan_for(self, model: str, prompt_len: int):
+        sch = self.scheduler
+        key = ("pre", model, sch._len_bucket(prompt_len))
+        plan = self._plan_memo.get(key)
+        if plan is None:
+            plan = self._plan_memo[key] = sch.prefill_plan(
+                self.workers[model].cfg, 1, prompt_len)
+        return plan
+
+    def _drift_event(self) -> bool:
+        """Compare the observed device state / profiler version against the
+        last planning reference; on a drift event the step-plan memo is
+        invalidated (the scheduler's own caches key on the new state, so
+        subsequent queries replan automatically)."""
+        sch = self.scheduler
+        obs = sch.sim.observe()
+        ver = sch.profiler.correction_version()
+        ref = self._drift_ref
+        self._drift_ref = (obs, ver)
+        if ref is None:
+            return False
+        robs, rver = ref
+        event = (ver != rver
+                 or abs(obs.cpu_f - robs.cpu_f) > self._DRIFT_CPU_F
+                 or abs(obs.gpu_f - robs.gpu_f) > self._DRIFT_GPU_F
+                 or abs(obs.cpu_bg - robs.cpu_bg) > self._DRIFT_BG
+                 or abs(obs.gpu_bg - robs.gpu_bg) > self._DRIFT_BG)
+        if event:
+            self.drift_events += 1
+            self._plan_memo.clear()
+        else:
+            self._drift_ref = ref  # keep the reference until a real move
+        return event
+
+    def _pool(self, model: str) -> _SlotPool:
+        pool = self.pools.get(model)
+        if pool is None:
+            pool = self.pools[model] = _SlotPool(self.workers[model], self.max_slots)
+        return pool
+
+    def _busy(self, model: str) -> bool:
+        return bool(self.queues[model]) or bool(
+            model in self.pools and self.pools[model].active)
+
+    def _plan_shape(self, pool: _SlotPool, extra: Optional[Request] = None):
+        """(seq-length, remaining-tokens) envelope of the pool for planning."""
+        seqs = [int(a.pos) for a in pool.active.values()]
+        rems = [a.req.max_new_tokens - len(a.tokens) for a in pool.active.values()]
+        if extra is not None:
+            seqs.append(len(extra.prompt))
+            rems.append(extra.max_new_tokens)
+        return max(seqs, default=1), max(max(rems, default=1), 1)
+
+    def _retire(self, pool: _SlotPool, seq: _ActiveSeq, out: List[Response]):
+        pool.alloc.free(seq.slot)
+        del pool.active[seq.slot]
+        energy = seq.energy_j if self.scheduler is not None else float("nan")
+        out.append(Response(seq.req.uid,
+                            np.asarray(seq.tokens[: seq.req.max_new_tokens], np.int32),
+                            time.time() - seq.req.t_submit, energy))
+
+    def _admit(self, model: str, pool: _SlotPool, out: List[Response]) -> int:
+        """Token-granularity admission: pull waiting requests into free slots
+        while the energy-aware policy approves. Returns #admitted."""
+        w, q = self.workers[model], self.queues[model]
+        n_admitted = 0
+        now = time.time()
+        while q and pool.alloc.n_free:
+            req = q[0]
+            if len(req.prompt) + req.max_new_tokens > w.max_len:
+                raise ValueError(
+                    f"request {req.uid}: prompt {len(req.prompt)} + "
+                    f"max_new {req.max_new_tokens} exceeds max_len {w.max_len}")
+            seq_len, max_new = self._plan_shape(pool, extra=req)
+            plan_fn = (None if self.scheduler is None else
+                       (lambda b: self._plan_for(model, b, seq_len, max_new)))
+            admit, reason = self.admission.decide(
+                w.cfg, len(pool.active), seq_len, max_new, now - req.t_submit,
+                plan_fn=plan_fn)
+            self.admission._record(admit, reason, len(pool.active), req.uid)
+            if not admit:
+                break
+            q.pop(0)
+            slot = pool.alloc.alloc()
+            logits, one_cache = w.prefill_one(req.prompt)
+            pool.cache = w.write_slot(pool.cache, one_cache, slot)
+            tok = int(np.asarray(jnp.argmax(logits[0], -1)))
+            seq = _ActiveSeq(req, slot, pos=len(req.prompt), tokens=[tok])
+            if self.scheduler is not None:
+                seq.energy_j += self._prefill_plan_for(model, len(req.prompt))["energy"]
+            pool.active[slot] = seq
+            pool.tokens[slot, 0] = tok
+            pool.pos[slot] = seq.pos
+            n_admitted += 1
+            if len(seq.tokens) >= req.max_new_tokens:
+                self._retire(pool, seq, out)
+        return n_admitted
+
+    def step_continuous(self, model: str, decode: bool = True,
+                        check_drift: bool = True) -> List[Response]:
+        """One engine iteration for ``model``: admission, then a single
+        ragged decode step over the slot pool, then retirement. With
+        ``decode=False`` (preempted worker) the pool holds its state — no
+        admitted request is ever dropped. ``check_drift=False`` is for
+        drivers (``run_all``) that already ran the per-round drift check."""
+        w = self.workers[model]
+        if w.cfg.is_encoder_decoder:
+            # enc-dec needs per-slot encoder caches; serve via the reference path
+            return self.step(model)
+        if check_drift and self.scheduler is not None:
+            self._drift_event()  # direct drivers still invalidate stale plans
+        pool = self._pool(model)
+        out: List[Response] = []
+        t0 = time.time()
+        n_admitted = self._admit(model, pool, out)
+        if decode and pool.active:
+            next_tok, pool.cache = w.decode_pool(pool.cache, pool.tokens, pool.pos)
+            n_active = len(pool.active)
+            step_energy = 0.0
+            if self.scheduler is not None:
+                seq_len, max_new = self._plan_shape(pool)
+                sp = self._plan_for(model, n_active, seq_len, max_new)
+                step_energy = sp["step_energy"]
+                self.scheduler.sim.step(sp["step_latency"])
+            for seq in list(pool.active.values()):
+                seq.tokens.append(int(next_tok[seq.slot]))
+                seq.pos += 1
+                if self.scheduler is not None:
+                    # energy of the (bucketed-batch) step plan, shared per slot
+                    seq.energy_j += step_energy / sp["batch"]
+                pool.tokens[seq.slot, 0] = next_tok[seq.slot]
+                pool.pos[seq.slot] = seq.pos
+                if len(seq.tokens) >= seq.req.max_new_tokens:
+                    self._retire(pool, seq, out)
+        if n_admitted or pool.active or out:
+            self.stats[model].append({
+                "mode": "continuous", "active": len(pool.active),
+                "admitted": n_admitted, "retired": len(out),
+                "wall_s": time.time() - t0,
+                "pred_energy_j": float(sum(r.energy_j_pred for r in out))
+                if self.scheduler is not None else float("nan")})
+        return out
 
     def run_all(self, temperature: float = 0.0) -> List[Response]:
         """Round-robin across models until all queues drain (the paper's
-        concurrent-DNN workload)."""
-        out = []
-        while any(self.queues.values()):
-            for m in list(self.workers):
-                out.extend(self.step(m, temperature))
+        concurrent-DNN workload). Continuous mode interleaves models at
+        token granularity, declares the co-execution level to the device
+        simulator, and preempts the lowest-priority busy worker for one
+        iteration when a drift event invalidates the cached plans."""
+        if self.mode == "bucketed" or temperature > 0.0:
+            if temperature > 0.0 and any(p.active for p in self.pools.values()):
+                raise ValueError(
+                    "sampled decode is not supported on the continuous path; "
+                    "drain the slot pools first or use mode='bucketed'")
+            out = []
+            while any(self.queues.values()):
+                for m in list(self.workers):
+                    out.extend(self.step(m, temperature))
+            return out
+        out: List[Response] = []
+        while True:
+            busy = [m for m in self.workers if self._busy(m)]
+            if not busy:
+                if self.scheduler is not None:
+                    self.scheduler.sim.set_coexec(1)
+                break
+            if self.scheduler is not None:
+                self.scheduler.sim.set_coexec(len(busy))
+            victim = None
+            if self.scheduler is not None and self._drift_event():
+                decoding = [m for m in busy
+                            if m in self.pools and self.pools[m].active]
+                if len(decoding) > 1:
+                    # the cached plans just got invalidated: yield the
+                    # lowest-priority worker's iteration to the
+                    # higher-priority pools while the planner re-solves
+                    victim = min(decoding, key=lambda m: (self.priorities[m], m))
+                    self.preemptions[victim] += 1
+            for m in busy:
+                out.extend(self.step_continuous(m, decode=(m != victim),
+                                                check_drift=False))
         return out

@@ -1,11 +1,9 @@
 """Train-step factory + simple host loop (used by examples and launch)."""
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import loss_fn
 from repro.sharding.context import ExecContext

@@ -5,8 +5,6 @@ import json
 import os
 import sys
 
-import pytest
-
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
@@ -32,3 +30,10 @@ def test_run_smoke_emits_json_and_asserts_fast_path(tmp_path, capsys):
     assert part["table_cache"]["speedup"] > 1.0
 
     assert prof["feature_timing"]["speedup"] >= 2.0
+
+    conc = json.loads((tmp_path / "BENCH_concurrent.json").read_text())
+    assert conc["smoke"] is True
+    assert conc["tokens_identical"], \
+        "continuous serving diverged from the bucketed reference"
+    assert conc["throughput_speedup"] >= 1.3
+    assert conc["energy_per_req_ratio"] <= 1.0 + 1e-6

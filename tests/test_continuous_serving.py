@@ -1,0 +1,235 @@
+"""Continuous batching: slot allocator, ragged decode equivalence,
+energy-aware admission, drift-triggered preemption."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import DeviceSim, RuntimeEnergyProfiler, build_transformer_graph
+from repro.models import init_params
+from repro.serving.engine import (
+    AdaOperScheduler,
+    AdmissionPolicy,
+    ModelWorker,
+    Request,
+    ServingEngine,
+    SlotAllocator,
+)
+
+# mixed prompt lengths AND mixed decode budgets: the bucketed reference
+# fragments this into three buckets and pads each to its slowest member
+MIXED = [(12, 4), (20, 6), (12, 2), (16, 5), (20, 1), (16, 6)]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mixed_requests(cfg, seed=3):
+    r = np.random.default_rng(seed)
+    return [Request(i, r.integers(1, cfg.vocab_size, plen, dtype=np.int32), mn)
+            for i, (plen, mn) in enumerate(MIXED)]
+
+
+# ---------------------------------------------------------------------------
+# slot allocator
+# ---------------------------------------------------------------------------
+
+
+def test_slot_allocator_exhaustion_and_reuse():
+    a = SlotAllocator(3)
+    got = [a.alloc() for _ in range(3)]
+    assert sorted(got) == [0, 1, 2]
+    assert a.n_free == 0 and a.n_active == 3
+    assert a.alloc() is None  # full pool: admission must wait
+    a.free(got[1])
+    assert a.n_free == 1
+    assert a.alloc() == got[1]  # LIFO: hottest row reused first
+
+
+def test_slot_allocator_rejects_bad_frees():
+    a = SlotAllocator(2)
+    s = a.alloc()
+    a.free(s)
+    with pytest.raises(ValueError):
+        a.free(s)  # double free
+    with pytest.raises(ValueError):
+        a.free(7)  # never allocated
+    with pytest.raises(ValueError):
+        SlotAllocator(0)
+
+
+# ---------------------------------------------------------------------------
+# continuous path: completion + bit-identity with the bucketed reference
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_requests_complete_token_identical(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(mode="continuous", max_slots=4)
+    eng.add_model("m", cfg, params, max_len=48)
+    for r in _mixed_requests(cfg):
+        eng.submit("m", r)
+    res = eng.run_all()
+    assert len(res) == len(MIXED)
+    got = {r.uid: r.tokens for r in res}
+    ref_worker = ModelWorker("ref", cfg, params, max_len=48)
+    for req in _mixed_requests(cfg):
+        assert got[req.uid].shape == (req.max_new_tokens,)
+        ref = ref_worker.generate(req.prompt[None], req.max_new_tokens)[0]
+        np.testing.assert_array_equal(got[req.uid], ref)
+
+
+def test_more_requests_than_slots_all_complete(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(mode="continuous", max_slots=2)
+    eng.add_model("m", cfg, params, max_len=48)
+    reqs = _mixed_requests(cfg, seed=5)
+    for r in reqs:
+        eng.submit("m", r)
+    res = eng.run_all()
+    assert sorted(r.uid for r in res) == [r.uid for r in reqs]
+    pool = eng.pools["m"]
+    assert pool.alloc.n_free == 2 and not pool.active  # every slot returned
+
+
+def test_bucketed_flag_keeps_reference_path(tiny):
+    cfg, params = tiny
+    res = {}
+    for mode in ("bucketed", "continuous"):
+        eng = ServingEngine(mode=mode, max_slots=4)
+        eng.add_model("m", cfg, params, max_len=48)
+        for r in _mixed_requests(cfg, seed=7):
+            eng.submit("m", r)
+        res[mode] = {r.uid: r.tokens for r in eng.run_all()}
+    assert set(res["bucketed"]) == set(res["continuous"])
+    for uid in res["bucketed"]:
+        np.testing.assert_array_equal(res["bucketed"][uid], res["continuous"][uid])
+
+
+def test_oversized_request_rejected(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(mode="continuous", max_slots=2)
+    eng.add_model("m", cfg, params, max_len=32)
+    eng.submit("m", Request(0, np.ones(30, np.int32), max_new_tokens=8))
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.run_all()
+
+
+# ---------------------------------------------------------------------------
+# energy-aware admission
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sched(tiny):
+    cfg, _ = tiny
+    g = build_transformer_graph(cfg, 2, 32)
+    prof = RuntimeEnergyProfiler(use_gru=False)
+    prof.offline_calibrate([g], n_samples=600, seed=0)
+    return AdaOperScheduler(prof, DeviceSim("moderate", seed=0))
+
+
+def test_admission_policy_idle_and_no_scheduler(sched, tiny):
+    cfg, _ = tiny
+    assert AdmissionPolicy(None).decide(cfg, 3, 32, 8, 0.0) == (True, "no-scheduler")
+    pol = AdmissionPolicy(sched)
+    assert pol.decide(cfg, 0, 32, 8, 0.0) == (True, "idle-pool")
+
+
+def test_admission_policy_slo_paths(sched, tiny):
+    cfg, _ = tiny
+    pol = AdmissionPolicy(sched, slo_s=1e-12)
+    # waited past the SLO -> starvation guard admits regardless
+    assert pol.decide(cfg, 2, 32, 8, wait_s=1.0) == (True, "slo-starvation")
+    # fresh request whose admission would blow the SLO -> denied
+    admit, reason = pol.decide(cfg, 2, 32, 8, wait_s=0.0)
+    assert (admit, reason) == (False, "slo-violation")
+
+
+def test_admission_policy_edp_amortises(sched, tiny):
+    """Within a pow2 batch bucket, another request shares the same step
+    plan, so per-request EDP strictly improves -> admit."""
+    cfg, _ = tiny
+    pol = AdmissionPolicy(sched)
+    admit, reason = pol.decide(cfg, 2, 32, 8, wait_s=0.0)
+    assert admit and reason == "edp-improves"
+
+
+class _FixedSim:
+    """Noise-free device stand-in: observe() is deterministic, so plan-cache
+    behaviour can be asserted exactly."""
+
+    def __init__(self):
+        self.state = DeviceSim("moderate", seed=0).state
+
+    def observe(self, noise=True):
+        return self.state
+
+
+def test_step_plan_is_bucketed_and_cached(sched, tiny):
+    cfg, _ = tiny
+    fixed = AdaOperScheduler(sched.profiler, _FixedSim())
+    p5 = fixed.step_plan(cfg, 5, 20, 6)
+    assert p5["batch"] == 8  # pow2 batch bucket
+    h0 = fixed.plan_cache_hits
+    p6 = fixed.step_plan(cfg, 6, 20, 5)  # same (batch, seq, horizon) buckets
+    assert p6["batch"] == 8
+    assert fixed.plan_cache_hits > h0
+    assert p6["step_latency"] == p5["step_latency"]
+
+
+# ---------------------------------------------------------------------------
+# drift-triggered preemption
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_never_drops_admitted_requests(tiny):
+    """Force a drift event every engine round: the lowest-priority worker is
+    preempted while plans re-solve, but every admitted request completes
+    with exactly its token budget."""
+    cfg, params = tiny
+    cfg2 = reduced(get_config("gemma2-2b"))
+    params2 = init_params(jax.random.PRNGKey(1), cfg2)
+    g = build_transformer_graph(cfg, 2, 32)
+    prof = RuntimeEnergyProfiler(use_gru=False)
+    prof.offline_calibrate([g], n_samples=600, seed=0)
+    sim = DeviceSim("high", seed=0)
+    eng = ServingEngine(scheduler=AdaOperScheduler(prof, sim),
+                        mode="continuous", max_slots=3)
+    eng.add_model("hi", cfg, params, max_len=48, priority=1)
+    eng.add_model("lo", cfg2, params2, max_len=48, priority=0)
+    def _always_drift():
+        return True
+
+    eng._drift_event = _always_drift  # every round is a drift event
+    r = np.random.default_rng(11)
+    n = 4
+    for i in range(n):
+        eng.submit("hi", Request(i, r.integers(1, cfg.vocab_size, 12, dtype=np.int32), 3))
+        eng.submit("lo", Request(100 + i, r.integers(1, cfg2.vocab_size, 16, dtype=np.int32), 4))
+    res = eng.run_all()
+    assert len(res) == 2 * n
+    by_uid = {x.uid: x for x in res}
+    for i in range(n):
+        assert by_uid[i].tokens.shape == (3,)
+        assert by_uid[100 + i].tokens.shape == (4,)
+    # only the low-priority worker was ever preempted, and it was preempted
+    assert eng.preemptions["hi"] == 0
+    assert eng.preemptions["lo"] > 0
+
+
+def test_drift_event_hysteresis(sched, tiny):
+    cfg, params = tiny
+    eng = ServingEngine(scheduler=sched, mode="continuous")
+    eng.add_model("m", cfg, params, max_len=48)
+    assert eng._drift_event() is False  # first observation seeds the reference
+    assert eng._drift_event() is False  # observation noise alone: no event
+    eng._plan_memo["sentinel"] = {"step_energy": 0.0}
+    sched.profiler._version += 1  # a correction update invalidates plans
+    assert eng._drift_event() is True
+    assert "sentinel" not in eng._plan_memo  # memo dropped on the event
+    assert eng.drift_events == 1

@@ -8,7 +8,6 @@ from repro.core import (
     RuntimeEnergyProfiler,
     build_yolo_graph,
     codl_plan,
-    mace_gpu_plan,
 )
 
 

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config, reduced
 from repro.models.moe import _local_expert_partial, _route, init_moe, moe_apply

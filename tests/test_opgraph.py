@@ -1,8 +1,7 @@
 """Operator-graph IR builders."""
-import numpy as np
 import pytest
 
-from repro.configs.base import ARCHS, get_config, reduced
+from repro.configs.base import ARCHS, get_config
 from repro.core.opgraph import build_transformer_graph, build_yolo_graph
 
 

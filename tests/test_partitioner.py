@@ -10,7 +10,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.opgraph import OpGraph, OpNode
 from repro.core.partitioner import (
-    PartitionPlan,
     _levels_for,
     dp_partition,
     incremental_repartition,

@@ -310,7 +310,7 @@ def test_cost_table_cache_guards_graph_identity(small_profiler):
     g2 = _rand_graph(rng, 6)
     obs = DeviceState(1.5, 0.5, 0.8, 0.1)
     fn = prof.cost_fn(obs)
-    t1 = _edge_costs(g1, fn)
+    _edge_costs(g1, fn)
     # same key shape but different graph object -> must not hit
     fake_key = (id(g1), 0, len(g1) - 1, fn.cache_key())
     assert prof.table_cache.get(fake_key, g2) is None
@@ -366,7 +366,6 @@ def test_scheduler_invalidate(sched_setup):
     cfg, prof, sched = sched_setup
     sched.choose(cfg, n_waiting=4, prompt_len=32, max_new=4)
     sched.invalidate()
-    n0 = prof.energy_model.n_predict_calls
     sched.choose(cfg, n_waiting=4, prompt_len=32, max_new=4)
     # plan cache was dropped; the cost-table cache may still serve tables,
     # but the decision must have been recomputed (plan_cache misses grew)

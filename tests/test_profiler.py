@@ -1,6 +1,5 @@
 """Runtime energy profiler: GBDT accuracy + GRU online adaptation."""
 import numpy as np
-import pytest
 
 from repro.core.gbdt import GBDTRegressor
 from repro.core.gru import GRUCorrector

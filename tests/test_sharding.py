@@ -3,10 +3,9 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
-from repro.utils.hlo_cost import loop_aware_cost, parse_hlo
+from repro.utils.hlo_cost import loop_aware_cost
 from repro.utils.hlo_stats import collective_stats, total_collective_bytes
 
 TOY_HLO = """
@@ -97,7 +96,7 @@ def test_small_mesh_dryrun_subprocess():
         "print('SUBPROC_OK', stats['flops'])"
     )
     env = dict(os.environ, PYTHONPATH="src")
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, env=env,
                          text=True, cwd=os.path.dirname(os.path.dirname(__file__)),
                          timeout=570)
     assert "SUBPROC_OK" in out.stdout, out.stderr[-2000:]

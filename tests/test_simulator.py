@@ -1,6 +1,5 @@
 """Device-simulator physics sanity."""
 import numpy as np
-import pytest
 
 from repro.core.opgraph import build_yolo_graph
 from repro.core.simulator import CPU, GPU, PRESETS, DeviceSim, DeviceState

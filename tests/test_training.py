@@ -4,13 +4,12 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config, reduced
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_params
 from repro.training.checkpoint import restore_checkpoint, save_checkpoint
-from repro.training.optimizer import OptConfig, adamw_update, global_norm, init_opt_state, schedule
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state, schedule
 from repro.training.train_loop import train_loop
 
 
@@ -37,7 +36,6 @@ def test_loss_decreases_moe():
 
 
 def test_grad_clip():
-    cfg = reduced(get_config("tinyllama-1.1b"))
     params = {"w": jnp.ones((4, 4))}
     grads = {"w": jnp.full((4, 4), 100.0)}
     st = init_opt_state(params)
