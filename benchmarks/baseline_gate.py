@@ -1,0 +1,38 @@
+"""Shared baseline loading for the smoke regression gates.
+
+Every smoke gate compares the current run against a committed JSON under
+``benchmarks/baselines/``. A *missing* baseline must fail loudly with a
+regeneration recipe — not with a KeyError three frames deep — so that a
+fresh checkout, a renamed file or a forgotten ``git add`` is diagnosed in
+one line. See docs/fleet.md ("Regenerating baselines").
+"""
+from __future__ import annotations
+
+import json
+import os
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+
+def load_baseline(path: str, regen_cmd: str) -> dict:
+    """Load a committed baseline JSON or exit with a clear message.
+
+    ``regen_cmd`` is the exact command that rewrites the file; it is echoed
+    in the error so the fix is copy-pasteable.
+    """
+    if not os.path.exists(path):
+        raise SystemExit(
+            f"benchmark baseline missing: {path}\n"
+            f"The smoke gate compares against a committed baseline and "
+            f"refuses to run without one.\n"
+            f"Regenerate it with:\n    {regen_cmd}\n"
+            f"then commit the file (see docs/fleet.md, 'Regenerating "
+            f"baselines').")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise SystemExit(
+            f"benchmark baseline unreadable: {path} ({e})\n"
+            f"Regenerate it with:\n    {regen_cmd}") from e

@@ -209,8 +209,12 @@ def serving(json_path=None, smoke=False, baseline_path=BASELINE_PATH, emit=print
         assert speedup >= 1.3, f"continuous speedup {speedup:.2f} < 1.3"
         assert energy_ratio <= 1.0 + 1e-6, \
             f"continuous energy/request {energy_ratio:.3f}x bucketed"
-        if baseline_path and os.path.exists(baseline_path):
-            base = json.loads(open(baseline_path).read())
+        if baseline_path:
+            from benchmarks.baseline_gate import load_baseline
+            base = load_baseline(
+                baseline_path,
+                "PYTHONPATH=src python -m benchmarks.run --smoke "
+                "--only concurrent --json-dir benchmarks/baselines")
             floor = base["throughput_speedup"] * 0.8
             assert speedup >= floor, \
                 (f"continuous speedup {speedup:.2f} regressed >20% vs "

@@ -1,0 +1,135 @@
+"""Fleet-replay benchmark: trace-driven population evaluation.
+
+``PYTHONPATH=src python -m benchmarks.bench_fleet
+    [--devices 4] [--scenario mixed] [--seed 0] [--duration 12]
+    [--json BENCH_fleet.json]``
+
+Samples a heterogeneous device population (flagship/mid/low tiers), replays
+one scenario trace per device through the full AdaOper closed loop in
+virtual time (``repro.fleet``), and emits per-device + fleet-aggregate
+metrics: energy per request, battery drain, SLO attainment and latency
+p50/p95/p99. Run-to-run deterministic in ``(devices, scenario, seed,
+duration)``.
+
+Smoke mode (``benchmarks/run.py --smoke`` and the CI ``fleet-smoke`` step)
+runs the fixed 2-device/6s configuration below and gates against the
+committed ``benchmarks/baselines/BENCH_fleet.json``: identical request
+count (the replay is deterministic), fleet energy/request within ±25%, and
+SLO attainment no more than 0.15 below the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.baseline_gate import BASELINE_DIR, load_baseline
+
+BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_fleet.json")
+
+# the smoke/baseline configuration — keep in lockstep with the committed
+# baseline (regenerate it whenever these change)
+SMOKE = dict(devices=2, scenario="mixed", seed=0, duration=6.0, calib=250)
+REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet --smoke-config "
+             "--json benchmarks/baselines/BENCH_fleet.json")
+
+ENERGY_TOL = 0.25       # relative drift allowed on fleet energy/request
+SLO_TOL = 0.15          # absolute drop allowed on fleet SLO attainment
+
+
+def gate(out: dict, baseline_path: str) -> None:
+    base = load_baseline(baseline_path, REGEN_CMD)
+    cur_f, base_f = out["fleet"], base["fleet"]
+    assert cur_f["n_requests"] == base_f["n_requests"], (
+        f"fleet replay is no longer deterministic vs baseline: served "
+        f"{cur_f['n_requests']} requests, baseline {base_f['n_requests']}")
+    e_cur, e_base = cur_f["energy_per_request_j"], base_f["energy_per_request_j"]
+    assert abs(e_cur - e_base) <= ENERGY_TOL * e_base, (
+        f"fleet energy/request drifted >{ENERGY_TOL:.0%}: "
+        f"{e_cur:.4e} J vs baseline {e_base:.4e} J")
+    assert cur_f["slo_attainment"] >= base_f["slo_attainment"] - SLO_TOL, (
+        f"fleet SLO attainment regressed: {cur_f['slo_attainment']:.3f} vs "
+        f"baseline {base_f['slo_attainment']:.3f} (tolerance {SLO_TOL})")
+
+
+def run(devices: int = 4, scenario: str = "mixed", seed: int = 0,
+        duration: float = 12.0, calib: int = 350, json_path: str = None,
+        smoke: bool = False, baseline_path: str = BASELINE_PATH,
+        emit=print) -> dict:
+    from repro.fleet import FleetReplay, sample_population
+
+    population = sample_population(devices, seed=seed)
+    replay = FleetReplay(population, scenario=scenario, duration_s=duration,
+                         seed=seed, calib_samples=calib)
+    report = replay.run()
+    out = report.to_dict()
+    out["smoke"] = smoke
+    out["config"] = {"devices": devices, "scenario": scenario, "seed": seed,
+                     "duration_s": duration, "calib_samples": calib}
+
+    f = report.fleet
+    for d in report.devices:
+        emit(f"fleet_device_{d.device},,tier={d.tier};n={d.n_requests};"
+             f"energy_mJ_per_req={d.energy_per_request_j*1e3:.3f};"
+             f"slo_attainment={d.slo_attainment:.3f};"
+             f"p95_ms={d.latency_s['p95']*1e3:.1f};"
+             f"battery_drain_pct={d.battery_drain_pct:.5f}")
+    emit(f"fleet_aggregate,,devices={f['n_devices']};requests={f['n_requests']};"
+         f"energy_mJ_per_req={f['energy_per_request_j']*1e3:.3f};"
+         f"slo_attainment={f['slo_attainment']:.3f};"
+         f"p50_ms={f['latency_s']['p50']*1e3:.1f};"
+         f"p95_ms={f['latency_s']['p95']*1e3:.1f};"
+         f"p99_ms={f['latency_s']['p99']*1e3:.1f};"
+         f"battery_drain_pct_mean={f['battery_drain_pct_mean']:.5f}")
+
+    if json_path:
+        with open(json_path, "w") as fp:
+            json.dump(out, fp, indent=2, sort_keys=True)
+    if smoke:
+        gate(out, baseline_path)
+    return out
+
+
+def smoke_run(json_path: str = None, smoke: bool = True,
+              baseline_path: str = BASELINE_PATH, emit=print) -> dict:
+    """The fixed configuration the baseline is recorded against."""
+    return run(devices=SMOKE["devices"], scenario=SMOKE["scenario"],
+               seed=SMOKE["seed"], duration=SMOKE["duration"],
+               calib=SMOKE["calib"], json_path=json_path, smoke=smoke,
+               baseline_path=baseline_path, emit=emit)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--scenario", default="mixed",
+                    help="voice | video | ar | mixed")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--duration", type=float, default=12.0,
+                    help="trace duration in simulated seconds")
+    ap.add_argument("--calib", type=int, default=350,
+                    help="per-device profiler calibration samples")
+    ap.add_argument("--json", default="BENCH_fleet.json",
+                    help="output JSON path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate against the committed baseline")
+    ap.add_argument("--smoke-config", action="store_true",
+                    help="use the fixed smoke/baseline configuration "
+                         "(overrides --devices/--scenario/--seed/--duration)")
+    args = ap.parse_args(argv)
+    if args.smoke and not args.smoke_config:
+        # the baseline is recorded for the fixed SMOKE configuration only;
+        # gating an arbitrary run against it would fail with a misleading
+        # "no longer deterministic" request-count mismatch
+        ap.error("--smoke gates against the committed baseline, which is "
+                 "recorded for the fixed smoke configuration; pass "
+                 "--smoke-config together with --smoke")
+    if args.smoke_config:
+        return smoke_run(json_path=args.json, smoke=args.smoke)
+    return run(devices=args.devices, scenario=args.scenario, seed=args.seed,
+               duration=args.duration, calib=args.calib, json_path=args.json,
+               smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,21 @@
 """Benchmark entry point: one section per paper table/figure + system extras.
 
 ``PYTHONPATH=src python -m benchmarks.run
-  [--only fig2,concurrent,profiler,partitioner,kernels,roofline]``
+  [--only fig2,concurrent,profiler,partitioner,kernels,roofline,fleet]``
 Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` runs the fast sections only (partitioner + profiler + the
-concurrent serving comparison) in a reduced matrix and ASSERTS the fast
-paths — batched lambda sweeps must beat the scalar reference with
-bit-identical plans, and the continuous serving engine must be
+concurrent serving comparison + the fleet replay) in a reduced matrix and
+ASSERTS the fast paths — batched lambda sweeps must beat the scalar
+reference with bit-identical plans, the continuous serving engine must be
 token-identical to the bucketed reference at >=1.3x throughput with no
 >20% speedup regression against the committed baseline JSON
-(``benchmarks/baselines/BENCH_concurrent.json``) — so planning-cost and
-serving regressions fail loudly (the test suite invokes this).
+(``benchmarks/baselines/BENCH_concurrent.json``), and the 2-device fleet
+replay must match ``benchmarks/baselines/BENCH_fleet.json`` (identical
+request count, energy/request and SLO attainment within tolerance) — so
+planning-cost, serving and fleet regressions fail loudly (the test suite
+invokes this). A missing baseline file fails with a regeneration recipe,
+not a traceback (see docs/fleet.md).
 ``--json-dir`` controls where the ``BENCH_*.json`` artifacts are written.
 """
 from __future__ import annotations
@@ -20,14 +24,14 @@ import argparse
 import os
 import time
 
-SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent")
+SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent", "fleet")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated sections "
-                         "(fig2,concurrent,profiler,partitioner,kernels,roofline)")
+                    help="comma-separated sections (fig2,concurrent,"
+                         "profiler,partitioner,kernels,roofline,fleet)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced fast-section run with loud fast-path asserts")
     ap.add_argument("--json-dir", default=".",
@@ -43,7 +47,8 @@ def main(argv=None) -> None:
                          f"got --only {args.only}")
     else:
         sections = set((args.only or
-                        "fig2,concurrent,profiler,partitioner,kernels,roofline")
+                        "fig2,concurrent,profiler,partitioner,kernels,"
+                        "roofline,fleet")
                        .split(","))
     t0 = time.time()
 
@@ -73,6 +78,13 @@ def main(argv=None) -> None:
         from benchmarks import bench_partitioner
         bench_partitioner.main(json_path=jp("BENCH_partitioner.json"),
                                smoke=args.smoke)
+    if "fleet" in sections:
+        banner("Fleet replay: trace-driven device population (repro.fleet)")
+        from benchmarks import bench_fleet
+        if args.smoke:
+            bench_fleet.smoke_run(json_path=jp("BENCH_fleet.json"))
+        else:
+            bench_fleet.run(json_path=jp("BENCH_fleet.json"))
     if "kernels" in sections:
         banner("Pallas kernels (interpret-mode regression)")
         from benchmarks import bench_kernels

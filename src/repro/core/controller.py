@@ -14,6 +14,7 @@ engine reuses it for pod-level concurrent scheduling.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
@@ -23,6 +24,23 @@ from repro.core.opgraph import OpGraph
 from repro.core.partitioner import PartitionPlan, dp_partition, incremental_repartition
 from repro.core.profiler import RuntimeEnergyProfiler
 from repro.core.simulator import DeviceSim
+
+
+@dataclass
+class ArrivalRecord:
+    """One replayed request: virtual-time accounting from ``run_trace``."""
+    t_arrival: float
+    t_start: float
+    t_done: float
+    latency_s: float  # completion - arrival (includes queueing)
+    energy_j: float
+    meta: object = None
+
+
+def round_robin_arrivals(graphs: List[OpGraph], iters: int):
+    """The legacy synthetic workload as an arrival source: every task
+    resident from t=0, served round-robin ``iters`` times."""
+    return [(0.0, g) for _ in range(iters) for g in graphs]
 
 
 @dataclass
@@ -125,6 +143,44 @@ class AdaOperController:
                 segs.append((lo, hi))
         return segs
 
+    # ----- trace-driven workload driver (pluggable arrival source) -----
+    def run_trace(self, arrivals) -> List[ArrivalRecord]:
+        """Discrete-event replay of an arrival source in *virtual* time.
+
+        ``arrivals``: iterable of ``(t_arrival_s, graph)`` or
+        ``(t_arrival_s, graph, meta)`` tuples (any order; sorted here). The
+        device executes one inference at a time: among the requests that have
+        arrived, the highest ``meta.priority`` (then FIFO) is served next;
+        gaps with an empty queue advance the device dynamics at idle and
+        drain the battery at the leakage floor (``DeviceSim.advance_idle``).
+        Latency in the returned records is completion minus arrival, i.e. it
+        includes queueing delay — the number an SLO is written against.
+        """
+        items = []
+        for k, item in enumerate(arrivals):
+            meta = item[2] if len(item) > 2 else None
+            items.append((float(item[0]), k, item[1],
+                          int(getattr(meta, "priority", 0)), meta))
+        items.sort(key=lambda it: (it[0], it[1]))
+        t = 0.0
+        i = 0
+        pending: List[Tuple] = []  # (-priority, arrival, seq, graph, meta)
+        out: List[ArrivalRecord] = []
+        while i < len(items) or pending:
+            if not pending and items[i][0] > t:
+                self.sim.advance_idle(items[i][0] - t)
+                t = items[i][0]
+            while i < len(items) and items[i][0] <= t + 1e-12:
+                t_arr, k, g, prio, meta = items[i]
+                heapq.heappush(pending, (-prio, t_arr, k, g, meta))
+                i += 1
+            _, t_arr, _, g, meta = heapq.heappop(pending)
+            lat, en = self.run_inference(g)
+            self.sim.drain(en)
+            out.append(ArrivalRecord(t_arr, t, t + lat, t + lat - t_arr, en, meta))
+            t += lat
+        return out
+
     # ----- concurrent workload driver -----
     def run_concurrent(self, graphs: List[OpGraph], iters: int = 50):
         """Round-robin concurrent inference (paper's concurrent-DNN setting).
@@ -134,13 +190,12 @@ class AdaOperController:
         time-shared and co-runners appear as background load, so the profiler
         learns (and the partitioner plans against) contended physics — the
         same contention model the serving engine's continuous scheduler runs
-        under."""
+        under. Implemented as a ``run_trace`` replay of the all-resident
+        round-robin arrival source (identical execution order)."""
         prev_coexec = self.sim.coexec
         self.sim.set_coexec(len(graphs))
         try:
-            for _ in range(iters):
-                for g in graphs:
-                    self.run_inference(g)
+            self.run_trace(round_robin_arrivals(graphs, iters))
         finally:
             self.sim.set_coexec(prev_coexec)
         return {g.name: self.stats[g.name] for g in graphs}

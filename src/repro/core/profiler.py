@@ -145,13 +145,24 @@ class RuntimeEnergyProfiler:
     # ------------------------------------------------------------------
     # offline calibration (factory/first-run energy benchmarking pass)
     # ------------------------------------------------------------------
-    def offline_calibrate(self, graphs, n_samples: int = 4000, seed: int = 0):
+    def offline_calibrate(self, graphs, n_samples: int = 4000, seed: int = 0,
+                          sim_factory=None):
+        """Fit the GBDT energy/latency models on simulated calibration traces.
+
+        ``sim_factory(preset_name, seed) -> DeviceSim`` overrides how the
+        calibration devices are built — the fleet population passes a factory
+        that bakes in each device's perturbed silicon (clocks, throughput,
+        power), so a per-device profiler learns *that* device's physics
+        rather than the stock Snapdragon-855 presets.
+        """
+        if sim_factory is None:
+            sim_factory = DeviceSim
         rng = np.random.default_rng(seed)
         X, ye, yt = [], [], []
         presets = list(PRESETS)
         ops = [op for g in graphs for op in g.nodes]
         for i in range(n_samples):
-            sim = DeviceSim(presets[rng.integers(len(presets))], seed=int(rng.integers(1 << 30)))
+            sim = sim_factory(presets[rng.integers(len(presets))], int(rng.integers(1 << 30)))
             for _ in range(int(rng.integers(0, 8))):
                 sim.step()
             op = ops[rng.integers(len(ops))]

@@ -68,11 +68,31 @@ class DeviceState:
 
 
 class DeviceSim:
-    """Two-class device with Ornstein-Uhlenbeck DVFS walk + bursty bg load."""
+    """Two-class device with Ornstein-Uhlenbeck DVFS walk + bursty bg load.
 
-    def __init__(self, preset: str = "moderate", seed: int = 0):
-        self.spec = {"cpu": CPU, "gpu": GPU}
+    The processor silicon is per-instance (``cpu_spec`` / ``gpu_spec``) so a
+    fleet population can perturb clocks, throughput and power around the
+    Snapdragon-855 defaults (``repro.fleet.population``); ``preset_params``
+    overrides entries of the named preset's operating point. An optional
+    battery (``battery_capacity_j``) turns the simulator into a drain
+    accountant: callers (the fleet replay harness, ``advance_idle``) charge
+    it with ``drain``.
+    """
+
+    def __init__(self, preset: str = "moderate", seed: int = 0,
+                 cpu_spec: ProcSpec = CPU, gpu_spec: ProcSpec = GPU,
+                 preset_params: dict = None,
+                 battery_capacity_j: float = None):
+        self.cpu_spec = cpu_spec
+        self.gpu_spec = gpu_spec
+        self.spec = {"cpu": cpu_spec, "gpu": gpu_spec}
         self.preset = dict(PRESETS[preset])
+        if preset_params:
+            self.preset.update(preset_params)
+        self.battery_capacity_j = battery_capacity_j
+        # `is not None`: a 0-joule battery is a dead battery, not "no battery"
+        self.battery_j = (float(battery_capacity_j)
+                          if battery_capacity_j is not None else None)
         self.rng = np.random.default_rng(seed)
         p = self.preset
         self.state = DeviceState(p["cpu_f"], p["gpu_f"], p["cpu_bg"], p["gpu_bg"])
@@ -94,6 +114,37 @@ class DeviceSim:
         """Declare ``n`` concurrently-active model workers (>=1)."""
         self.coexec = max(1, int(n))
 
+    # ----- battery accounting (fleet-replay hook) -----
+    @property
+    def battery_pct(self) -> float:
+        """Remaining battery in percent (100.0 when no battery is attached)."""
+        if self.battery_j is None:
+            return 100.0
+        if self.battery_capacity_j <= 0.0:
+            return 0.0
+        return 100.0 * self.battery_j / self.battery_capacity_j
+
+    def drain(self, energy_j: float) -> None:
+        """Charge ``energy_j`` joules against the battery (no-op without one)."""
+        if self.battery_j is not None:
+            self.battery_j = max(0.0, self.battery_j - float(energy_j))
+
+    def idle_power_w(self) -> float:
+        """Leakage floor with both processor classes idle."""
+        return self.cpu_spec.p_idle_w + self.gpu_spec.p_idle_w
+
+    def advance_idle(self, dt_s: float, max_steps: int = 20) -> None:
+        """Idle the device for ``dt_s``: dynamics relax toward the preset
+        (``active=0``), the die cools, and the leakage floor drains the
+        battery. Long gaps are walked in at most ``max_steps`` chunks so a
+        multi-second lull costs O(1) rather than O(dt/50ms) RNG draws."""
+        if dt_s <= 0.0:
+            return
+        self.drain(self.idle_power_w() * dt_s)
+        n = min(max_steps, max(1, int(round(dt_s / 0.05))))
+        for _ in range(n):
+            self.step(dt_s / n, active=0.0)
+
     # ----- dynamics -----
     def step(self, dt_s: float = 0.05, active: float = 1.0):
         p, s, r = self.preset, self.state, self.rng
@@ -107,8 +158,8 @@ class DeviceSim:
         # OU pull toward preset mean + noise; clamp to spec range
         s.cpu_f += 0.2 * (p["cpu_f"] - s.cpu_f) + vol * r.normal() * 0.3
         s.gpu_f += 0.2 * (p["gpu_f"] - s.gpu_f) + vol * r.normal() * 0.08
-        s.cpu_f = float(np.clip(s.cpu_f, CPU.f_min_ghz, CPU.f_max_ghz))
-        s.gpu_f = float(np.clip(s.gpu_f, GPU.f_min_ghz, GPU.f_max_ghz))
+        s.cpu_f = float(np.clip(s.cpu_f, self.cpu_spec.f_min_ghz, self.cpu_spec.f_max_ghz))
+        s.gpu_f = float(np.clip(s.gpu_f, self.gpu_spec.f_min_ghz, self.gpu_spec.f_max_ghz))
         # bursty background load (2-state markov modulated). Bursts land
         # mostly on the CPU — that's where co-running app threads live.
         if r.random() < 0.10:
@@ -157,10 +208,11 @@ class DeviceSim:
         cx = self.coexec
         cpu_bg = min(0.99, s.cpu_bg + 0.05 * (cx - 1))
         gpu_bg = min(0.95, s.gpu_bg + 0.05 * (cx - 1))
+        cpu_spec, gpu_spec = self.cpu_spec, self.gpu_spec
         bytes_a = alpha * (op.bytes_in + op.bytes_out + op.weight_bytes)
         bytes_b = (1 - alpha) * (op.bytes_in + op.bytes_out + op.weight_bytes)
-        t_gpu = self._class_time(GPU, s.gpu_f, gpu_bg, alpha * op.flops, bytes_a) if alpha > 0 else 0.0
-        t_cpu = self._class_time(CPU, s.cpu_f, cpu_bg, (1 - alpha) * op.flops, bytes_b) if alpha < 1 else 0.0
+        t_gpu = self._class_time(gpu_spec, s.gpu_f, gpu_bg, alpha * op.flops, bytes_a) if alpha > 0 else 0.0
+        t_cpu = self._class_time(cpu_spec, s.cpu_f, cpu_bg, (1 - alpha) * op.flops, bytes_b) if alpha < 1 else 0.0
         split = 0.0 < alpha < 1.0
         # boundary traffic: repartition between consecutive ops + co-exec halo
         move = abs(alpha - prev_alpha) * op.bytes_in + (op.comm_bytes_if_split * 0.5 if split else 0.0)
@@ -168,13 +220,13 @@ class DeviceSim:
         lat = max(t_gpu, t_cpu) + t_bus + (SYNC_OVERHEAD_S if split else 0.0)
         e = 0.0
         if alpha > 0:
-            e += t_gpu * self._power(GPU, s.gpu_f, 1.0) + (lat - t_gpu) * GPU.p_idle_w
+            e += t_gpu * self._power(gpu_spec, s.gpu_f, 1.0) + (lat - t_gpu) * gpu_spec.p_idle_w
         else:
-            e += lat * GPU.p_idle_w
+            e += lat * gpu_spec.p_idle_w
         if alpha < 1:
-            e += t_cpu * self._power(CPU, s.cpu_f, 1.0) + (lat - t_cpu) * CPU.p_idle_w
+            e += t_cpu * self._power(cpu_spec, s.cpu_f, 1.0) + (lat - t_cpu) * cpu_spec.p_idle_w
         else:
-            e += lat * CPU.p_idle_w
+            e += lat * cpu_spec.p_idle_w
         e += move * BUS_PJ_PER_BYTE * 1e-12
         # latent thermal effect: leakage power and throttling grow with die
         # temperature; invisible to the monitor (see __init__)

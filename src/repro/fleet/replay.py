@@ -1,0 +1,219 @@
+"""Discrete-event fleet replay: one AdaOper stack per simulated device.
+
+For every device sampled by :mod:`repro.fleet.population`, the harness
+builds the full closed loop — a :class:`DeviceSim` with that device's
+silicon and battery, a per-device :class:`RuntimeEnergyProfiler` calibrated
+against *that* device's physics, and an :class:`AdaOperController` (and, in
+serving mode, a :class:`ServingEngine`) — then replays a scenario trace from
+:mod:`repro.fleet.workloads` in virtual time and rolls the records up into a
+:class:`FleetReport`.
+
+Backends:
+  * ``graph``   — every request is one inference of its model's operator
+    graph through ``AdaOperController.run_trace`` (ground-truth simulator
+    physics; fast; all scenarios). This is what ``benchmarks/bench_fleet.py``
+    and the CI smoke run.
+  * ``serving`` — LLM requests are served token-by-token through
+    ``ServingEngine.run_trace`` (continuous batching, energy-aware
+    admission, virtual clock). Requires an LLM-only trace (the ``voice``
+    scenario) and per-model (cfg, params).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.controller import AdaOperController
+from repro.core.opgraph import OpGraph, build_transformer_graph, build_yolo_graph
+from repro.core.profiler import RuntimeEnergyProfiler
+from repro.fleet.population import DeviceProfile
+from repro.fleet.report import DeviceMetrics, FleetReport, RequestRecord
+from repro.fleet.workloads import ASSISTANT, Trace, make_trace
+
+# trace seeds are decorrelated across devices with a fixed stride (prime, so
+# device k's stream never aliases device 0's at small fleet seeds)
+_DEVICE_SEED_STRIDE = 7919
+
+
+def _require_models(trace: Trace, known, backend: str) -> None:
+    """Fail fast when a trace names models the backend cannot serve."""
+    missing = {r.model for r in trace} - set(known)
+    if not missing:
+        return
+    if backend == "graph":
+        raise ValueError(f"trace references unknown models {sorted(missing)}")
+    raise ValueError(
+        f"serving backend has no workers for {sorted(missing)}; "
+        "use an LLM-only trace (scenario 'voice') or backend='graph'")
+
+
+def default_graph_registry() -> Dict[str, OpGraph]:
+    """Model id -> operator graph for the graph backend. The detector is the
+    paper's YOLOv2-tiny at capture resolution, AR segmentation is the same
+    backbone at 224 (lighter, tighter SLO), and the assistant is the reduced
+    LLM's decode graph — one graph pass per utterance."""
+    from repro.configs.base import get_config, reduced
+
+    vision = build_yolo_graph(resolution=416)
+    vision.name = "vision-det"
+    ar = build_yolo_graph(resolution=224)
+    ar.name = "ar-seg"
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    assistant = build_transformer_graph(cfg, 1, 48, kind="decode")
+    assistant.name = ASSISTANT
+    return {vision.name: vision, ar.name: ar, assistant.name: assistant}
+
+
+class DeviceReplay:
+    """One simulated device's replay runtime (see module docstring)."""
+
+    def __init__(self, profile: DeviceProfile, graphs: Dict[str, OpGraph],
+                 calib_samples: int = 350, use_gru: bool = False,
+                 objective: str = "edp", backend: str = "graph",
+                 serving_models: Optional[Dict[str, tuple]] = None,
+                 max_slots: int = 4):
+        if backend not in ("graph", "serving"):
+            raise ValueError(f"unknown replay backend {backend!r}")
+        self.profile = profile
+        self.graphs = graphs
+        self.backend = backend
+        self.sim = profile.make_sim()
+        self.profiler = RuntimeEnergyProfiler(use_gru=use_gru,
+                                              seed=profile.seed)
+        self.profiler.offline_calibrate(list(graphs.values()),
+                                        n_samples=calib_samples,
+                                        seed=profile.seed,
+                                        sim_factory=profile.sim_factory())
+        self.controller = AdaOperController(self.sim, self.profiler,
+                                            objective=objective)
+        self.engine = None
+        if backend == "serving":
+            from repro.serving.engine import AdaOperScheduler, ServingEngine
+            self.engine = ServingEngine(
+                scheduler=AdaOperScheduler(self.profiler, self.sim),
+                mode="continuous", max_slots=max_slots,
+                sampling_seed=profile.seed)
+            for name, (cfg, params) in (serving_models or {}).items():
+                self.engine.add_model(name, cfg, params, max_len=64)
+
+    def run(self, trace: Trace) -> Tuple[List[RequestRecord], Dict[str, int]]:
+        b0 = self.sim.battery_pct
+        if self.backend == "graph":
+            records, counters = self._run_graph(trace)
+        else:
+            records, counters = self._run_serving(trace)
+        self.battery_start_pct, self.battery_end_pct = b0, self.sim.battery_pct
+        return records, counters
+
+    def metrics(self, records, counters) -> DeviceMetrics:
+        return DeviceMetrics.from_records(
+            self.profile.name, self.profile.tier, records,
+            self.battery_start_pct, self.battery_end_pct, counters)
+
+    # ------------------------------------------------------------------
+    def _run_graph(self, trace: Trace):
+        _require_models(trace, self.graphs, "graph")
+        # resident concurrent tasks contend like run_concurrent's setting
+        prev = self.sim.coexec
+        self.sim.set_coexec(max(1, len({r.model for r in trace})))
+        try:
+            recs = self.controller.run_trace(
+                [(r.t_arrival_s, self.graphs[r.model], r) for r in trace])
+        finally:
+            self.sim.set_coexec(prev)
+        records = [RequestRecord(
+            uid=rec.meta.uid, model=rec.meta.model,
+            priority=rec.meta.priority, t_arrival_s=rec.t_arrival,
+            t_done_s=rec.t_done, latency_s=rec.latency_s,
+            energy_j=rec.energy_j, slo_s=rec.meta.slo_s,
+            slo_met=rec.latency_s <= rec.meta.slo_s) for rec in recs]
+        counters = {"repartitions": 0, "incremental": 0, "drift_events": 0}
+        for st in self.controller.stats.values():
+            counters["repartitions"] += st.repartitions
+            counters["incremental"] += st.incremental
+            counters["drift_events"] += st.drift_events
+        return records, counters
+
+    def _run_serving(self, trace: Trace):
+        from repro.serving.engine import Request
+
+        _require_models(trace, self.engine.workers, "serving")
+        by_uid = {r.uid: r for r in trace}
+        arrivals = []
+        for r in trace:
+            vocab = self.engine.workers[r.model].cfg.vocab_size
+            rng = np.random.default_rng([trace.seed, r.uid])
+            prompt = rng.integers(1, vocab, max(r.prompt_len, 1),
+                                  dtype=np.int32)
+            arrivals.append((r.t_arrival_s, r.model,
+                             Request(r.uid, prompt,
+                                     max_new_tokens=max(r.max_new_tokens, 1))))
+        responses = self.engine.run_trace(arrivals)
+        records = []
+        for resp in responses:
+            r = by_uid[resp.uid]
+            records.append(RequestRecord(
+                uid=r.uid, model=r.model, priority=r.priority,
+                t_arrival_s=r.t_arrival_s,
+                t_done_s=r.t_arrival_s + resp.latency_s,
+                latency_s=resp.latency_s, energy_j=resp.energy_j_pred,
+                slo_s=r.slo_s, slo_met=resp.latency_s <= r.slo_s))
+        counters = {
+            "drift_events": self.engine.drift_events,
+            "preemptions": sum(self.engine.preemptions.values()),
+            "admission_denials": sum(
+                1 for d in self.engine.admission.log if not d["admit"]),
+        }
+        return records, counters
+
+
+class FleetReplay:
+    """Replay one scenario across a device population and aggregate."""
+
+    def __init__(self, population: List[DeviceProfile],
+                 scenario: str = "mixed", duration_s: float = 12.0,
+                 seed: int = 0, calib_samples: int = 350,
+                 use_gru: bool = False, backend: str = "graph",
+                 graphs: Optional[Dict[str, OpGraph]] = None,
+                 serving_models: Optional[Dict[str, tuple]] = None,
+                 rate_scale: float = 1.0, max_slots: int = 4):
+        self.population = population
+        self.scenario = scenario
+        self.duration_s = duration_s
+        self.seed = seed
+        self.calib_samples = calib_samples
+        self.use_gru = use_gru
+        self.backend = backend
+        self.graphs = graphs
+        self.serving_models = serving_models
+        self.rate_scale = rate_scale
+        self.max_slots = max_slots
+
+    def device_trace(self, idx: int) -> Trace:
+        return make_trace(self.scenario, self.duration_s,
+                          seed=self.seed + _DEVICE_SEED_STRIDE * idx,
+                          rate_scale=self.rate_scale)
+
+    def run(self) -> FleetReport:
+        graphs = self.graphs if self.graphs is not None else default_graph_registry()
+        devices: List[DeviceMetrics] = []
+        all_latencies: List[float] = []
+        for idx, profile in enumerate(self.population):
+            trace = self.device_trace(idx)
+            # fail before the expensive per-device calibration, for either
+            # backend (DeviceReplay re-checks for direct callers)
+            _require_models(trace,
+                            graphs if self.backend == "graph"
+                            else (self.serving_models or {}),
+                            self.backend)
+            dr = DeviceReplay(profile, graphs,
+                              calib_samples=self.calib_samples,
+                              use_gru=self.use_gru, backend=self.backend,
+                              serving_models=self.serving_models,
+                              max_slots=self.max_slots)
+            records, counters = dr.run(trace)
+            devices.append(dr.metrics(records, counters))
+            all_latencies.extend(r.latency_s for r in records)
+        return FleetReport.build(self.scenario, self.seed, self.duration_s,
+                                 self.backend, devices, all_latencies)

@@ -23,6 +23,7 @@ Two serving modes (see docs/serving.md):
 from __future__ import annotations
 
 import time
+import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -160,11 +161,13 @@ class ModelWorker:
         (max_slots,1) int32, ``pos`` (max_slots,) int32 per-slot write
         positions. Reuses the jitted decode body — a (B,) position vector
         traces the ragged path in the model. Returns (greedy next tokens
-        (max_slots,) np.int32, cache)."""
+        (max_slots,) np.int32, logits (max_slots, V) for per-slot sampling,
+        cache)."""
         logits, pool_cache = self._decode(self.params, pool_cache,
                                           jnp.asarray(tokens),
                                           jnp.asarray(pos, dtype=jnp.int32))
-        return np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)), pool_cache
+        return (np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)),
+                logits, pool_cache)
 
 
 class AdaOperScheduler:
@@ -360,6 +363,10 @@ class _ActiveSeq:
     pos: int  # next cache write position (prompt_len + generated so far)
     tokens: List[int] = field(default_factory=list)
     energy_j: float = 0.0
+    # seed-derived per-request sampling stream (None on the greedy path):
+    # token i draws from fold_in(rng, i), so sampled decode is reproducible
+    # under ANY admission order / slot placement / co-resident set
+    rng: Optional[jax.Array] = None
 
 
 class _SlotPool:
@@ -380,7 +387,7 @@ class ServingEngine:
 
     def __init__(self, scheduler: Optional[AdaOperScheduler] = None,
                  mode: str = "continuous", max_slots: int = 8,
-                 slo_s: Optional[float] = None):
+                 slo_s: Optional[float] = None, sampling_seed: int = 0):
         if mode not in ("continuous", "bucketed"):
             raise ValueError(f"unknown serving mode {mode!r}")
         self.workers: Dict[str, ModelWorker] = {}
@@ -389,6 +396,7 @@ class ServingEngine:
         self.stats: Dict[str, list] = {}
         self.mode = mode
         self.max_slots = max_slots
+        self.sampling_seed = sampling_seed
         self.admission = AdmissionPolicy(scheduler, slo_s=slo_s)
         self.pools: Dict[str, _SlotPool] = {}
         self.priorities: Dict[str, int] = {}
@@ -399,6 +407,31 @@ class ServingEngine:
         # admission/accounting must cost dict lookups, not DP solves
         self._plan_memo: Dict = {}
         self._drift_ref = None
+        # virtual clock for trace-driven replay (run_trace): None => wall
+        # time; a float => every latency/wait computation reads it and every
+        # planned prefill/decode step advances it by the predicted latency
+        self._vtime: Optional[float] = None
+
+    def _now(self) -> float:
+        return self._vtime if self._vtime is not None else time.time()
+
+    def _stream_key(self, model: str, uid) -> jax.Array:
+        """Per-request sampling stream: seed ⊕ model ⊕ uid. Independent of
+        admission order, slot placement and co-resident requests."""
+        key = jax.random.PRNGKey(self.sampling_seed)
+        key = jax.random.fold_in(key, zlib.crc32(model.encode()) & 0x7FFFFFFF)
+        return jax.random.fold_in(key, int(uid) & 0x7FFFFFFF)
+
+    def _sample(self, model: str, seq: _ActiveSeq, logits,
+                temperature: float) -> int:
+        """Sample token #len(seq.tokens) of ``seq``'s stream from (V,)
+        logits. The stream is established lazily so a sequence admitted
+        greedily can switch to sampled decode mid-flight (same uid-derived
+        stream either way)."""
+        if seq.rng is None:
+            seq.rng = self._stream_key(model, seq.req.uid)
+        k = jax.random.fold_in(seq.rng, len(seq.tokens))
+        return int(jax.random.categorical(k, jnp.asarray(logits) / temperature))
 
     def add_model(self, name, cfg, params, max_len=512, ctx=ExecContext(),
                   priority: int = 0):
@@ -410,7 +443,7 @@ class ServingEngine:
 
     def submit(self, model: str, req: Request):
         if req.t_submit == 0.0:
-            req.t_submit = time.time()
+            req.t_submit = self._now()
         self.queues[model].append(req)
 
     def step(self, model: str, temperature: float = 0.0) -> List[Response]:
@@ -532,14 +565,14 @@ class ServingEngine:
         energy = seq.energy_j if self.scheduler is not None else float("nan")
         out.append(Response(seq.req.uid,
                             np.asarray(seq.tokens[: seq.req.max_new_tokens], np.int32),
-                            time.time() - seq.req.t_submit, energy))
+                            self._now() - seq.req.t_submit, energy))
 
-    def _admit(self, model: str, pool: _SlotPool, out: List[Response]) -> int:
+    def _admit(self, model: str, pool: _SlotPool, out: List[Response],
+               temperature: float = 0.0) -> int:
         """Token-granularity admission: pull waiting requests into free slots
         while the energy-aware policy approves. Returns #admitted."""
         w, q = self.workers[model], self.queues[model]
         n_admitted = 0
-        now = time.time()
         while q and pool.alloc.n_free:
             req = q[0]
             if len(req.prompt) + req.max_new_tokens > w.max_len:
@@ -550,8 +583,8 @@ class ServingEngine:
             plan_fn = (None if self.scheduler is None else
                        (lambda b: self._plan_for(model, b, seq_len, max_new)))
             admit, reason = self.admission.decide(
-                w.cfg, len(pool.active), seq_len, max_new, now - req.t_submit,
-                plan_fn=plan_fn)
+                w.cfg, len(pool.active), seq_len, max_new,
+                self._now() - req.t_submit, plan_fn=plan_fn)
             self.admission._record(admit, reason, len(pool.active), req.uid)
             if not admit:
                 break
@@ -559,10 +592,20 @@ class ServingEngine:
             slot = pool.alloc.alloc()
             logits, one_cache = w.prefill_one(req.prompt)
             pool.cache = w.write_slot(pool.cache, one_cache, slot)
-            tok = int(np.asarray(jnp.argmax(logits[0], -1)))
-            seq = _ActiveSeq(req, slot, pos=len(req.prompt), tokens=[tok])
+            seq = _ActiveSeq(req, slot, pos=len(req.prompt))
+            if temperature > 0.0:
+                tok = self._sample(model, seq, logits[0], temperature)
+            else:
+                tok = int(np.asarray(jnp.argmax(logits[0], -1)))
+            seq.tokens.append(tok)
             if self.scheduler is not None:
-                seq.energy_j += self._prefill_plan_for(model, len(req.prompt))["energy"]
+                pp = self._prefill_plan_for(model, len(req.prompt))
+                seq.energy_j += pp["energy"]
+                self.scheduler.sim.drain(pp["energy"])
+                if self._vtime is not None:
+                    # virtual replay charges prefill at the planner's
+                    # predicted latency (wall-clock mode measures it)
+                    self._vtime += pp["latency"]
             pool.active[slot] = seq
             pool.tokens[slot, 0] = tok
             pool.pos[slot] = seq.pos
@@ -572,24 +615,28 @@ class ServingEngine:
         return n_admitted
 
     def step_continuous(self, model: str, decode: bool = True,
-                        check_drift: bool = True) -> List[Response]:
+                        check_drift: bool = True,
+                        temperature: float = 0.0) -> List[Response]:
         """One engine iteration for ``model``: admission, then a single
         ragged decode step over the slot pool, then retirement. With
         ``decode=False`` (preempted worker) the pool holds its state — no
         admitted request is ever dropped. ``check_drift=False`` is for
-        drivers (``run_all``) that already ran the per-round drift check."""
+        drivers (``run_all``) that already ran the per-round drift check.
+        ``temperature > 0`` samples each slot from its own seed-derived RNG
+        stream (reproducible under any admission order)."""
         w = self.workers[model]
         if w.cfg.is_encoder_decoder:
             # enc-dec needs per-slot encoder caches; serve via the reference path
-            return self.step(model)
+            return self.step(model, temperature)
         if check_drift and self.scheduler is not None:
             self._drift_event()  # direct drivers still invalidate stale plans
         pool = self._pool(model)
         out: List[Response] = []
         t0 = time.time()
-        n_admitted = self._admit(model, pool, out)
+        n_admitted = self._admit(model, pool, out, temperature)
         if decode and pool.active:
-            next_tok, pool.cache = w.decode_pool(pool.cache, pool.tokens, pool.pos)
+            next_tok, logits, pool.cache = w.decode_pool(pool.cache, pool.tokens,
+                                                         pool.pos)
             n_active = len(pool.active)
             step_energy = 0.0
             if self.scheduler is not None:
@@ -597,13 +644,21 @@ class ServingEngine:
                 sp = self._plan_for(model, n_active, seq_len, max_new)
                 step_energy = sp["step_energy"]
                 self.scheduler.sim.step(sp["step_latency"])
+                # drain exactly what the resident requests are charged
+                # (step_energy/batch each), so battery drain and summed
+                # per-request energy stay consistent in the fleet report
+                self.scheduler.sim.drain(step_energy * n_active / sp["batch"])
+                if self._vtime is not None:
+                    self._vtime += sp["step_latency"]
             for seq in list(pool.active.values()):
-                seq.tokens.append(int(next_tok[seq.slot]))
+                tok = (self._sample(model, seq, logits[seq.slot], temperature)
+                       if temperature > 0.0 else int(next_tok[seq.slot]))
+                seq.tokens.append(tok)
                 seq.pos += 1
                 if self.scheduler is not None:
                     # energy of the (bucketed-batch) step plan, shared per slot
                     seq.energy_j += step_energy / sp["batch"]
-                pool.tokens[seq.slot, 0] = next_tok[seq.slot]
+                pool.tokens[seq.slot, 0] = tok
                 pool.pos[seq.slot] = seq.pos
                 if len(seq.tokens) >= seq.req.max_new_tokens:
                     self._retire(pool, seq, out)
@@ -616,17 +671,38 @@ class ServingEngine:
                 if self.scheduler is not None else float("nan")})
         return out
 
+    def _serve_round(self, busy: List[str], out: List[Response],
+                     temperature: float = 0.0) -> None:
+        """One continuous round over the busy models: declare the
+        co-execution level, run the drift check once, preempt the
+        lowest-priority decoding worker on a drift event, then step each
+        model at token granularity."""
+        if self.scheduler is not None:
+            self.scheduler.sim.set_coexec(len(busy))
+        victim = None
+        if self.scheduler is not None and self._drift_event():
+            decoding = [m for m in busy
+                        if m in self.pools and self.pools[m].active]
+            if len(decoding) > 1:
+                # the cached plans just got invalidated: yield the
+                # lowest-priority worker's iteration to the
+                # higher-priority pools while the planner re-solves
+                victim = min(decoding, key=lambda m: (self.priorities[m], m))
+                self.preemptions[victim] += 1
+        for m in busy:
+            out.extend(self.step_continuous(m, decode=(m != victim),
+                                            check_drift=False,
+                                            temperature=temperature))
+
     def run_all(self, temperature: float = 0.0) -> List[Response]:
         """Round-robin across models until all queues drain (the paper's
         concurrent-DNN workload). Continuous mode interleaves models at
         token granularity, declares the co-execution level to the device
         simulator, and preempts the lowest-priority busy worker for one
-        iteration when a drift event invalidates the cached plans."""
-        if self.mode == "bucketed" or temperature > 0.0:
-            if temperature > 0.0 and any(p.active for p in self.pools.values()):
-                raise ValueError(
-                    "sampled decode is not supported on the continuous path; "
-                    "drain the slot pools first or use mode='bucketed'")
+        iteration when a drift event invalidates the cached plans. Sampled
+        decode (``temperature > 0``) draws each slot from its own
+        seed-derived stream — see ``_stream_key``."""
+        if self.mode == "bucketed":
             out = []
             while any(self.queues.values()):
                 for m in list(self.workers):
@@ -639,19 +715,64 @@ class ServingEngine:
                 if self.scheduler is not None:
                     self.scheduler.sim.set_coexec(1)
                 break
-            if self.scheduler is not None:
-                self.scheduler.sim.set_coexec(len(busy))
-            victim = None
-            if self.scheduler is not None and self._drift_event():
-                decoding = [m for m in busy
-                            if m in self.pools and self.pools[m].active]
-                if len(decoding) > 1:
-                    # the cached plans just got invalidated: yield the
-                    # lowest-priority worker's iteration to the
-                    # higher-priority pools while the planner re-solves
-                    victim = min(decoding, key=lambda m: (self.priorities[m], m))
-                    self.preemptions[victim] += 1
-            for m in busy:
-                out.extend(self.step_continuous(m, decode=(m != victim),
-                                                check_drift=False))
+            self._serve_round(busy, out, temperature)
+        return out
+
+    def run_trace(self, arrivals, start_t: float = 0.0,
+                  temperature: float = 0.0) -> List[Response]:
+        """Trace-driven serving in *virtual* time (the fleet replay
+        harness's pluggable arrival source).
+
+        ``arrivals``: iterable of ``(t_arrival_s, model_name, Request)``
+        tuples (any order). The engine clock starts at ``start_t`` and
+        advances by the planner's *predicted* prefill/decode-step latencies;
+        idle gaps jump to the next arrival while the device simulator relaxes
+        at idle and drains its battery at the leakage floor. Response
+        latencies are therefore deterministic simulated seconds measured from
+        the trace arrival time (queueing included) — not wall time. Requires
+        continuous mode and a scheduler (without one the clock cannot
+        advance)."""
+        if self.mode != "continuous" or self.scheduler is None:
+            raise ValueError("run_trace requires mode='continuous' and a "
+                             "scheduler (the virtual clock advances by "
+                             "predicted step latencies)")
+        items = sorted(((float(t), m, r) for t, m, r in arrivals),
+                       key=lambda it: it[0])
+        models = {m for _, m, _ in items}
+        unknown = models - set(self.workers)
+        if unknown:
+            raise ValueError(
+                f"run_trace arrivals name models with no registered worker: "
+                f"{sorted(unknown)}")
+        encdec = sorted(m for m in models
+                        if self.workers[m].cfg.is_encoder_decoder)
+        if encdec:
+            # enc-dec serves via the wall-clock bucketed fallback, which
+            # would silently mix wall time into the virtual-time records
+            raise ValueError(
+                f"run_trace cannot serve encoder-decoder models {encdec}: "
+                f"they fall back to the bucketed path, whose latencies are "
+                f"wall-clock (the virtual clock never advances)")
+        sim = self.scheduler.sim
+        out: List[Response] = []
+        self._vtime = float(start_t)
+        i = 0
+        try:
+            while True:
+                while i < len(items) and items[i][0] <= self._vtime + 1e-12:
+                    t_arr, model, req = items[i]
+                    req.t_submit = t_arr
+                    self.queues[model].append(req)
+                    i += 1
+                busy = [m for m in self.workers if self._busy(m)]
+                if not busy:
+                    if i >= len(items):
+                        sim.set_coexec(1)
+                        break
+                    sim.advance_idle(items[i][0] - self._vtime)
+                    self._vtime = items[i][0]
+                    continue
+                self._serve_round(busy, out, temperature)
+        finally:
+            self._vtime = None
         return out

@@ -37,3 +37,13 @@ def test_run_smoke_emits_json_and_asserts_fast_path(tmp_path, capsys):
         "continuous serving diverged from the bucketed reference"
     assert conc["throughput_speedup"] >= 1.3
     assert conc["energy_per_req_ratio"] <= 1.0 + 1e-6
+
+    fleet = json.loads((tmp_path / "BENCH_fleet.json").read_text())
+    assert fleet["smoke"] is True
+    f = fleet["fleet"]
+    assert f["n_requests"] > 0
+    assert f["energy_per_request_j"] > 0.0
+    assert f["battery_drain_pct_mean"] > 0.0
+    assert set(f["latency_s"]) == {"p50", "p95", "p99"}
+    assert 0.0 <= f["slo_attainment"] <= 1.0
+    assert len(fleet["devices"]) == 2  # the committed smoke configuration

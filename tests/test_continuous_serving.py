@@ -222,6 +222,62 @@ def test_preemption_never_drops_admitted_requests(tiny):
     assert eng.preemptions["lo"] > 0
 
 
+def test_sampled_decode_deterministic_under_any_admission_order(tiny):
+    """Per-slot sampling RNG: each request draws from its own seed-derived
+    stream (seed ⊕ model ⊕ uid ⊕ token-index), so sampled outputs are
+    identical whatever the submission order, pool size, or co-resident
+    requests — and change when the engine's sampling seed changes."""
+    cfg, params = tiny
+
+    def serve(order, max_slots, sampling_seed=7):
+        eng = ServingEngine(mode="continuous", max_slots=max_slots,
+                            sampling_seed=sampling_seed)
+        eng.add_model("m", cfg, params, max_len=48)
+        reqs = _mixed_requests(cfg, seed=9)
+        for i in order:
+            eng.submit("m", reqs[i])
+        return {r.uid: r.tokens for r in eng.run_all(temperature=0.8)}
+
+    fwd = serve(range(len(MIXED)), max_slots=4)
+    rev = serve(reversed(range(len(MIXED))), max_slots=2)
+    assert set(fwd) == set(rev)
+    for uid in fwd:
+        np.testing.assert_array_equal(fwd[uid], rev[uid])
+    other = serve(range(len(MIXED)), max_slots=4, sampling_seed=8)
+    assert any(not np.array_equal(fwd[u], other[u]) for u in fwd), \
+        "changing the sampling seed must change at least one stream"
+
+
+def test_greedy_admitted_sequence_survives_sampled_step(tiny):
+    """A sequence admitted at temperature=0 can finish under sampled decode:
+    its stream is established lazily from the same uid derivation."""
+    cfg, params = tiny
+    eng = ServingEngine(mode="continuous", max_slots=2, sampling_seed=3)
+    eng.add_model("m", cfg, params, max_len=48)
+    r = np.random.default_rng(0)
+    eng.submit("m", Request(0, r.integers(1, cfg.vocab_size, 12, dtype=np.int32), 4))
+    out = eng.step_continuous("m")  # greedy admit + first decode step
+    assert not out and eng.pools["m"].active
+    res = eng.run_all(temperature=0.8)  # switch to sampled mid-flight
+    assert len(res) == 1 and res[0].tokens.shape == (4,)
+
+
+def test_run_trace_requires_scheduler(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(mode="continuous")
+    eng.add_model("m", cfg, params, max_len=48)
+    with pytest.raises(ValueError, match="run_trace"):
+        eng.run_trace([])
+
+
+def test_run_trace_rejects_unknown_model(sched, tiny):
+    cfg, params = tiny
+    eng = ServingEngine(scheduler=sched, mode="continuous")
+    eng.add_model("m", cfg, params, max_len=48)
+    with pytest.raises(ValueError, match="no registered worker"):
+        eng.run_trace([(0.0, "typo", Request(0, np.ones(4, np.int32), 2))])
+
+
 def test_drift_event_hysteresis(sched, tiny):
     cfg, params = tiny
     eng = ServingEngine(scheduler=sched, mode="continuous")

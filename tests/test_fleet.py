@@ -1,0 +1,297 @@
+"""Fleet replay subsystem: trace determinism, population sampling,
+hand-computed aggregate math, replay determinism, serving backend."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# the benchmarks package lives at the repo root (same pattern as
+# test_benchmarks_smoke)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.fleet import (
+    DeviceMetrics,
+    DeviceReplay,
+    FleetReplay,
+    FleetReport,
+    RequestRecord,
+    SCENARIOS,
+    TIERS,
+    latency_percentiles,
+    make_trace,
+    sample_population,
+)
+from repro.fleet.workloads import ASSISTANT
+
+# ---------------------------------------------------------------------------
+# trace generators
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_trace_determinism(scenario):
+    a = make_trace(scenario, duration_s=10.0, seed=3)
+    b = make_trace(scenario, duration_s=10.0, seed=3)
+    assert a.requests == b.requests  # same seed => byte-identical trace
+    c = make_trace(scenario, duration_s=10.0, seed=4)
+    assert a.requests != c.requests  # different seed => different arrivals
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_trace_fields_and_ordering(scenario):
+    t = make_trace(scenario, duration_s=10.0, seed=0)
+    assert len(t) > 0
+    arrivals = [r.t_arrival_s for r in t]
+    assert arrivals == sorted(arrivals)
+    assert [r.uid for r in t] == list(range(len(t)))  # uids in arrival order
+    for r in t:
+        assert 0.0 <= r.t_arrival_s < t.duration_s
+        assert r.slo_s > 0.0
+        if r.model == ASSISTANT:
+            assert r.prompt_len > 0 and r.max_new_tokens > 0
+
+
+def test_unknown_scenario_rejected():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_trace("nope")
+
+
+# ---------------------------------------------------------------------------
+# population sampler
+# ---------------------------------------------------------------------------
+
+
+def test_population_determinism_and_tier_mix():
+    a = sample_population(8, seed=1)
+    b = sample_population(8, seed=1)
+    assert a == b
+    # largest-remainder apportionment of the default 25/50/25 mix
+    tiers = [p.tier for p in a]
+    assert tiers.count("flagship") == 2
+    assert tiers.count("mid") == 4
+    assert tiers.count("low") == 2
+    for p in a:
+        assert p.tier in TIERS
+        lo, hi = TIERS[p.tier].battery_j
+        assert lo <= p.battery_capacity_j <= hi
+
+
+def test_population_tiers_order_performance():
+    pop = sample_population(12, seed=0)
+    mean_gflops = {
+        tier: np.mean([p.gpu_spec.gflops_per_ghz for p in pop if p.tier == tier])
+        for tier in ("flagship", "mid", "low")}
+    assert mean_gflops["flagship"] > mean_gflops["mid"] > mean_gflops["low"]
+
+
+def test_device_profile_builds_working_sim():
+    p = sample_population(3, seed=2)[-1]
+    sim = p.make_sim()
+    assert sim.battery_pct == 100.0
+    sim.drain(p.battery_capacity_j / 2)
+    assert sim.battery_pct == pytest.approx(50.0)
+    sim.advance_idle(1.0)  # leakage drain + relaxed dynamics
+    assert sim.battery_pct < 50.0
+    # calibration factory sweeps stock presets on THIS device's silicon
+    cal = p.sim_factory()("high", 7)
+    assert cal.battery_j is None
+    assert cal.cpu_spec == p.cpu_spec
+
+
+def test_zero_capacity_battery_is_dead_not_absent():
+    from repro.core.simulator import DeviceSim
+
+    dead = DeviceSim("moderate", battery_capacity_j=0.0)
+    assert dead.battery_pct == 0.0  # dead battery, not "no battery" (100%)
+    none = DeviceSim("moderate")
+    assert none.battery_pct == 100.0
+
+
+# ---------------------------------------------------------------------------
+# aggregate metric math (hand-computed expectations)
+# ---------------------------------------------------------------------------
+
+
+def _rec(uid, lat, en, slo):
+    return RequestRecord(uid=uid, model="m", priority=0, t_arrival_s=0.0,
+                         t_done_s=lat, latency_s=lat, energy_j=en,
+                         slo_s=slo, slo_met=lat <= slo)
+
+
+def test_device_metrics_hand_computed():
+    recs = [_rec(0, 0.1, 0.02, 0.15), _rec(1, 0.3, 0.04, 0.15)]
+    m = DeviceMetrics.from_records("dev-a", "flagship", recs,
+                                   battery_start_pct=100.0,
+                                   battery_end_pct=99.5)
+    assert m.n_requests == 2
+    assert m.energy_j == pytest.approx(0.06)
+    assert m.energy_per_request_j == pytest.approx(0.03)
+    assert m.battery_drain_pct == pytest.approx(0.5)
+    assert m.slo_attainment == pytest.approx(0.5)  # r1 misses its 150 ms SLO
+    # linear-interpolation percentiles of [0.1, 0.3]
+    assert m.latency_s["p50"] == pytest.approx(0.2)
+    assert m.latency_s["p95"] == pytest.approx(0.29)
+    assert m.latency_s["p99"] == pytest.approx(0.298)
+
+
+def test_fleet_aggregate_hand_computed():
+    dev_a = DeviceMetrics.from_records(
+        "dev-a", "flagship",
+        [_rec(0, 0.1, 0.02, 0.15), _rec(1, 0.3, 0.04, 0.15)],
+        battery_start_pct=100.0, battery_end_pct=99.5,
+        counters={"repartitions": 2})
+    dev_b = DeviceMetrics.from_records(
+        "dev-b", "low", [_rec(2, 0.2, 0.06, 0.5)],
+        battery_start_pct=100.0, battery_end_pct=99.0,
+        counters={"repartitions": 1})
+    rep = FleetReport.build("mixed", 0, 10.0, "graph", [dev_a, dev_b],
+                            all_latencies=[0.1, 0.3, 0.2])
+    f = rep.fleet
+    assert f["n_devices"] == 2
+    assert f["tier_counts"] == {"flagship": 1, "low": 1}
+    assert f["n_requests"] == 3
+    assert f["energy_j"] == pytest.approx(0.12)
+    # request-weighted: 0.12 J over 3 requests, NOT the mean of device means
+    assert f["energy_per_request_j"] == pytest.approx(0.04)
+    assert f["slo_attainment"] == pytest.approx(2.0 / 3.0)
+    # per-device mean: each device owns one battery
+    assert f["battery_drain_pct_mean"] == pytest.approx(0.75)
+    assert f["counters"] == {"repartitions": 3}
+    # pooled percentiles over [0.1, 0.2, 0.3]
+    assert f["latency_s"]["p50"] == pytest.approx(0.2)
+    assert f["latency_s"]["p95"] == pytest.approx(0.29)
+    assert f["latency_s"]["p99"] == pytest.approx(0.298)
+
+
+def test_latency_percentiles_empty_and_single():
+    assert latency_percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert latency_percentiles([0.4]) == {"p50": 0.4, "p95": 0.4, "p99": 0.4}
+
+
+def test_report_json_roundtrip(tmp_path):
+    dev = DeviceMetrics.from_records(
+        "dev-a", "mid", [_rec(0, 0.1, 0.02, 0.15)],
+        battery_start_pct=100.0, battery_end_pct=99.9)
+    rep = FleetReport.build("voice", 7, 5.0, "graph", [dev], [0.1])
+    path = tmp_path / "fleet.json"
+    rep.write_json(str(path))
+    back = FleetReport.read_json(str(path))
+    assert back.to_dict() == rep.to_dict()
+    # stable serialization (sorted keys) for diffable baselines
+    assert json.loads(path.read_text()) == rep.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# replay harness
+# ---------------------------------------------------------------------------
+
+
+def _small_replay():
+    pop = sample_population(1, seed=5)
+    return FleetReplay(pop, scenario="ar", duration_s=1.5, seed=5,
+                       calib_samples=120)
+
+
+def test_replay_graph_backend_deterministic_and_accounts():
+    rep_a = _small_replay().run()
+    rep_b = _small_replay().run()
+    assert rep_a.to_dict() == rep_b.to_dict()
+    f = rep_a.fleet
+    assert f["n_requests"] > 0
+    assert f["energy_per_request_j"] > 0.0
+    assert f["battery_drain_pct_mean"] > 0.0  # replay drains the battery
+    assert 0.0 <= f["slo_attainment"] <= 1.0
+    d = rep_a.devices[0]
+    assert d.battery_end_pct < d.battery_start_pct
+    assert d.latency_s["p50"] <= d.latency_s["p95"] <= d.latency_s["p99"]
+    assert d.counters["repartitions"] >= 1
+
+
+def test_replay_rejects_unknown_model():
+    pop = sample_population(1, seed=0)
+    replay = FleetReplay(pop, scenario="video", duration_s=2.0, seed=0,
+                         calib_samples=120, graphs={})
+    with pytest.raises(ValueError, match="unknown models"):
+        replay.run()
+
+
+@pytest.mark.parametrize("backend", ["nope"])
+def test_replay_rejects_unknown_backend(backend):
+    pop = sample_population(1, seed=0)
+    with pytest.raises(ValueError, match="backend"):
+        DeviceReplay(pop[0], {}, backend=backend)
+
+
+def test_serving_backend_serves_voice_trace():
+    jax = pytest.importorskip("jax")
+    from repro.configs.base import get_config, reduced
+    from repro.models import init_params
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pop = sample_population(1, seed=1)
+
+    def once():
+        replay = FleetReplay(pop, scenario="voice", duration_s=20.0, seed=3,
+                             calib_samples=120, backend="serving",
+                             serving_models={ASSISTANT: (cfg, params)})
+        return replay.run()
+
+    rep = once()
+    n_trace = len(make_trace("voice", 20.0, seed=3))
+    assert rep.fleet["n_requests"] == n_trace  # every arrival served
+    assert rep.backend == "serving"
+    d = rep.devices[0]
+    assert d.battery_end_pct < d.battery_start_pct
+    assert all(np.isfinite(v) for v in d.latency_s.values())
+    # virtual-time serving is deterministic run-to-run
+    assert once().to_dict() == rep.to_dict()
+
+
+def test_serving_backend_rejects_vision_trace():
+    jax = pytest.importorskip("jax")
+    from repro.configs.base import get_config, reduced
+    from repro.models import init_params
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pop = sample_population(1, seed=0)
+    replay = FleetReplay(pop, scenario="video", duration_s=2.0, seed=0,
+                         calib_samples=120, backend="serving",
+                         serving_models={ASSISTANT: (cfg, params)})
+    with pytest.raises(ValueError, match="no workers"):
+        replay.run()
+
+
+# ---------------------------------------------------------------------------
+# baseline gate ergonomics
+# ---------------------------------------------------------------------------
+
+
+def test_missing_baseline_fails_with_regeneration_recipe(tmp_path):
+    from benchmarks.baseline_gate import load_baseline
+
+    missing = str(tmp_path / "BENCH_nope.json")
+    with pytest.raises(SystemExit) as exc:
+        load_baseline(missing, "python -m benchmarks.bench_fleet --regen")
+    msg = str(exc.value)
+    assert "BENCH_nope.json" in msg
+    assert "python -m benchmarks.bench_fleet --regen" in msg  # copy-pasteable
+
+
+def test_corrupt_baseline_fails_clearly(tmp_path):
+    from benchmarks.baseline_gate import load_baseline
+
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(SystemExit, match="unreadable"):
+        load_baseline(str(bad), "regen-cmd")
+
+
+def test_fleet_gate_uses_loud_baseline_error(tmp_path):
+    from benchmarks import bench_fleet
+
+    with pytest.raises(SystemExit, match="Regenerate"):
+        bench_fleet.gate({"fleet": {}}, str(tmp_path / "missing.json"))
