@@ -36,3 +36,23 @@ def load_baseline(path: str, regen_cmd: str) -> dict:
         raise SystemExit(
             f"benchmark baseline unreadable: {path} ({e})\n"
             f"Regenerate it with:\n    {regen_cmd}") from e
+
+
+def gate_fleet(out: dict, baseline_path: str, regen_cmd: str,
+               energy_tol: float, slo_tol: float, label: str = "fleet") -> None:
+    """Shared fleet-replay gate for every fleet baseline (graph and serving
+    backends alike): identical request count (the replay is deterministic),
+    fleet energy/request within ``energy_tol`` (relative) and SLO attainment
+    no more than ``slo_tol`` (absolute) below the committed baseline."""
+    base = load_baseline(baseline_path, regen_cmd)
+    cur_f, base_f = out["fleet"], base["fleet"]
+    assert cur_f["n_requests"] == base_f["n_requests"], (
+        f"{label} replay is no longer deterministic vs baseline: served "
+        f"{cur_f['n_requests']} requests, baseline {base_f['n_requests']}")
+    e_cur, e_base = cur_f["energy_per_request_j"], base_f["energy_per_request_j"]
+    assert abs(e_cur - e_base) <= energy_tol * e_base, (
+        f"{label} energy/request drifted >{energy_tol:.0%}: "
+        f"{e_cur:.4e} J vs baseline {e_base:.4e} J")
+    assert cur_f["slo_attainment"] >= base_f["slo_attainment"] - slo_tol, (
+        f"{label} SLO attainment regressed: {cur_f['slo_attainment']:.3f} vs "
+        f"baseline {base_f['slo_attainment']:.3f} (tolerance {slo_tol})")

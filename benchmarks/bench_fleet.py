@@ -2,20 +2,25 @@
 
 ``PYTHONPATH=src python -m benchmarks.bench_fleet
     [--devices 4] [--scenario mixed] [--seed 0] [--duration 12]
-    [--json BENCH_fleet.json]``
+    [--backend graph|serving] [--json BENCH_fleet.json]``
 
 Samples a heterogeneous device population (flagship/mid/low tiers), replays
 one scenario trace per device through the full AdaOper closed loop in
 virtual time (``repro.fleet``), and emits per-device + fleet-aggregate
 metrics: energy per request, battery drain, SLO attainment and latency
 p50/p95/p99. Run-to-run deterministic in ``(devices, scenario, seed,
-duration)``.
+duration, backend)``. ``--backend serving`` streams LLM requests through
+the continuous-batching ServingEngine (vision frames take the graph path
+on the same virtual timeline), so ``mixed`` traces exercise the full
+vision+LLM co-execution scenario.
 
 Smoke mode (``benchmarks/run.py --smoke`` and the CI ``fleet-smoke`` step)
-runs the fixed 2-device/6s configuration below and gates against the
-committed ``benchmarks/baselines/BENCH_fleet.json``: identical request
-count (the replay is deterministic), fleet energy/request within ±25%, and
-SLO attainment no more than 0.15 below the baseline.
+runs two fixed configurations — the 2-device/6s graph replay and the
+1-device/3s mixed serving replay — and gates each against its committed
+baseline (``benchmarks/baselines/BENCH_fleet.json`` /
+``BENCH_fleet_serving.json``): identical request count (the replay is
+deterministic), fleet energy/request within ±25%, and SLO attainment no
+more than 0.15 below the baseline (``benchmarks/baseline_gate.gate_fleet``).
 """
 from __future__ import annotations
 
@@ -23,49 +28,63 @@ import argparse
 import json
 import os
 
-from benchmarks.baseline_gate import BASELINE_DIR, load_baseline
+from benchmarks.baseline_gate import BASELINE_DIR, gate_fleet
 
 BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_fleet.json")
+SERVING_BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_fleet_serving.json")
 
-# the smoke/baseline configuration — keep in lockstep with the committed
-# baseline (regenerate it whenever these change)
+# the smoke/baseline configurations — keep in lockstep with the committed
+# baselines (regenerate them whenever these change)
 SMOKE = dict(devices=2, scenario="mixed", seed=0, duration=6.0, calib=250)
+SERVING_SMOKE = dict(devices=1, scenario="mixed", seed=2, duration=3.0,
+                     calib=120)
 REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet --smoke-config "
              "--json benchmarks/baselines/BENCH_fleet.json")
+SERVING_REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet "
+                     "--serving-smoke-config "
+                     "--json benchmarks/baselines/BENCH_fleet_serving.json")
 
 ENERGY_TOL = 0.25       # relative drift allowed on fleet energy/request
 SLO_TOL = 0.15          # absolute drop allowed on fleet SLO attainment
 
 
 def gate(out: dict, baseline_path: str) -> None:
-    base = load_baseline(baseline_path, REGEN_CMD)
-    cur_f, base_f = out["fleet"], base["fleet"]
-    assert cur_f["n_requests"] == base_f["n_requests"], (
-        f"fleet replay is no longer deterministic vs baseline: served "
-        f"{cur_f['n_requests']} requests, baseline {base_f['n_requests']}")
-    e_cur, e_base = cur_f["energy_per_request_j"], base_f["energy_per_request_j"]
-    assert abs(e_cur - e_base) <= ENERGY_TOL * e_base, (
-        f"fleet energy/request drifted >{ENERGY_TOL:.0%}: "
-        f"{e_cur:.4e} J vs baseline {e_base:.4e} J")
-    assert cur_f["slo_attainment"] >= base_f["slo_attainment"] - SLO_TOL, (
-        f"fleet SLO attainment regressed: {cur_f['slo_attainment']:.3f} vs "
-        f"baseline {base_f['slo_attainment']:.3f} (tolerance {SLO_TOL})")
+    backend = out.get("config", {}).get("backend", "graph")
+    regen = SERVING_REGEN_CMD if backend == "serving" else REGEN_CMD
+    gate_fleet(out, baseline_path, regen, ENERGY_TOL, SLO_TOL,
+               label=f"fleet[{backend}]")
+
+
+def _default_serving_models():
+    """The reduced assistant LLM the serving-backend benchmark serves."""
+    import jax
+
+    from repro.configs.base import get_config, reduced
+    from repro.fleet.workloads import ASSISTANT
+    from repro.models import init_params
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    return {ASSISTANT: (cfg, init_params(jax.random.PRNGKey(0), cfg))}
 
 
 def run(devices: int = 4, scenario: str = "mixed", seed: int = 0,
         duration: float = 12.0, calib: int = 350, json_path: str = None,
         smoke: bool = False, baseline_path: str = BASELINE_PATH,
-        emit=print) -> dict:
+        backend: str = "graph", emit=print) -> dict:
     from repro.fleet import FleetReplay, sample_population
 
     population = sample_population(devices, seed=seed)
+    serving_models = (_default_serving_models() if backend == "serving"
+                      else None)
     replay = FleetReplay(population, scenario=scenario, duration_s=duration,
-                         seed=seed, calib_samples=calib)
+                         seed=seed, calib_samples=calib, backend=backend,
+                         serving_models=serving_models)
     report = replay.run()
     out = report.to_dict()
     out["smoke"] = smoke
     out["config"] = {"devices": devices, "scenario": scenario, "seed": seed,
-                     "duration_s": duration, "calib_samples": calib}
+                     "duration_s": duration, "calib_samples": calib,
+                     "backend": backend}
 
     f = report.fleet
     for d in report.devices:
@@ -92,11 +111,25 @@ def run(devices: int = 4, scenario: str = "mixed", seed: int = 0,
 
 def smoke_run(json_path: str = None, smoke: bool = True,
               baseline_path: str = BASELINE_PATH, emit=print) -> dict:
-    """The fixed configuration the baseline is recorded against."""
+    """The fixed graph-backend configuration the baseline is recorded
+    against."""
     return run(devices=SMOKE["devices"], scenario=SMOKE["scenario"],
                seed=SMOKE["seed"], duration=SMOKE["duration"],
                calib=SMOKE["calib"], json_path=json_path, smoke=smoke,
                baseline_path=baseline_path, emit=emit)
+
+
+def serving_smoke_run(json_path: str = None, smoke: bool = True,
+                      baseline_path: str = SERVING_BASELINE_PATH,
+                      emit=print) -> dict:
+    """The fixed mixed-trace serving-backend configuration its baseline is
+    recorded against (vision frames via graph path, LLM requests via the
+    continuous engine)."""
+    return run(devices=SERVING_SMOKE["devices"],
+               scenario=SERVING_SMOKE["scenario"],
+               seed=SERVING_SMOKE["seed"], duration=SERVING_SMOKE["duration"],
+               calib=SERVING_SMOKE["calib"], json_path=json_path, smoke=smoke,
+               baseline_path=baseline_path, backend="serving", emit=emit)
 
 
 def main(argv=None) -> dict:
@@ -109,26 +142,35 @@ def main(argv=None) -> dict:
                     help="trace duration in simulated seconds")
     ap.add_argument("--calib", type=int, default=350,
                     help="per-device profiler calibration samples")
+    ap.add_argument("--backend", default="graph",
+                    choices=("graph", "serving"),
+                    help="graph (operator-graph replay) or serving "
+                         "(continuous engine for LLM requests)")
     ap.add_argument("--json", default="BENCH_fleet.json",
                     help="output JSON path")
     ap.add_argument("--smoke", action="store_true",
                     help="gate against the committed baseline")
     ap.add_argument("--smoke-config", action="store_true",
-                    help="use the fixed smoke/baseline configuration "
+                    help="use the fixed graph smoke/baseline configuration "
                          "(overrides --devices/--scenario/--seed/--duration)")
+    ap.add_argument("--serving-smoke-config", action="store_true",
+                    help="use the fixed mixed-trace serving smoke/baseline "
+                         "configuration")
     args = ap.parse_args(argv)
-    if args.smoke and not args.smoke_config:
-        # the baseline is recorded for the fixed SMOKE configuration only;
-        # gating an arbitrary run against it would fail with a misleading
+    if args.smoke and not (args.smoke_config or args.serving_smoke_config):
+        # the baselines are recorded for the fixed smoke configurations only;
+        # gating an arbitrary run against them would fail with a misleading
         # "no longer deterministic" request-count mismatch
-        ap.error("--smoke gates against the committed baseline, which is "
-                 "recorded for the fixed smoke configuration; pass "
-                 "--smoke-config together with --smoke")
+        ap.error("--smoke gates against a committed baseline, which is "
+                 "recorded for a fixed smoke configuration; pass "
+                 "--smoke-config or --serving-smoke-config with --smoke")
     if args.smoke_config:
         return smoke_run(json_path=args.json, smoke=args.smoke)
+    if args.serving_smoke_config:
+        return serving_smoke_run(json_path=args.json, smoke=args.smoke)
     return run(devices=args.devices, scenario=args.scenario, seed=args.seed,
                duration=args.duration, calib=args.calib, json_path=args.json,
-               smoke=args.smoke)
+               smoke=args.smoke, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -10,9 +10,11 @@ ASSERTS the fast paths — batched lambda sweeps must beat the scalar
 reference with bit-identical plans, the continuous serving engine must be
 token-identical to the bucketed reference at >=1.3x throughput with no
 >20% speedup regression against the committed baseline JSON
-(``benchmarks/baselines/BENCH_concurrent.json``), and the 2-device fleet
-replay must match ``benchmarks/baselines/BENCH_fleet.json`` (identical
-request count, energy/request and SLO attainment within tolerance) — so
+(``benchmarks/baselines/BENCH_concurrent.json``), and the fleet replays
+(2-device graph + 1-device mixed-trace serving) must match
+``benchmarks/baselines/BENCH_fleet.json`` / ``BENCH_fleet_serving.json``
+(identical request count, energy/request and SLO attainment within
+tolerance) — so
 planning-cost, serving and fleet regressions fail loudly (the test suite
 invokes this). A missing baseline file fails with a regeneration recipe,
 not a traceback (see docs/fleet.md).
@@ -83,6 +85,10 @@ def main(argv=None) -> None:
         from benchmarks import bench_fleet
         if args.smoke:
             bench_fleet.smoke_run(json_path=jp("BENCH_fleet.json"))
+            # mixed-trace serving backend (vision via graph path, LLM via
+            # the continuous engine), gated like the graph replay
+            bench_fleet.serving_smoke_run(
+                json_path=jp("BENCH_fleet_serving.json"))
         else:
             bench_fleet.run(json_path=jp("BENCH_fleet.json"))
     if "kernels" in sections:

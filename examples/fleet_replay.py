@@ -10,9 +10,11 @@ Run:  PYTHONPATH=src python examples/fleet_replay.py
           [--devices 3] [--scenario mixed] [--duration 8] [--seed 0]
           [--backend graph|serving]
 
-``--backend serving`` serves the voice-assistant scenario token-by-token
-through the continuous-batching ServingEngine instead of the operator-graph
-controller (slower; LLM-only traces).
+``--backend serving`` serves LLM requests token-by-token through the
+continuous-batching ServingEngine (batched prefill admission, energy-aware
+admission) while vision frames run through the graph path on the same
+virtual timeline — so every scenario, including ``mixed``, replays on
+either backend (serving is slower: real jitted model steps).
 """
 import argparse
 
@@ -38,7 +40,6 @@ def main(argv=None):
         from repro.fleet.workloads import ASSISTANT
         from repro.models import init_params
 
-        scenario = "voice"  # the LLM-only trace
         cfg = reduced(get_config("tinyllama-1.1b"))
         serving_models = {ASSISTANT: (cfg, init_params(jax.random.PRNGKey(0), cfg))}
 

@@ -13,13 +13,17 @@ Backends:
     graph through ``AdaOperController.run_trace`` (ground-truth simulator
     physics; fast; all scenarios). This is what ``benchmarks/bench_fleet.py``
     and the CI smoke run.
-  * ``serving`` — LLM requests are served token-by-token through
-    ``ServingEngine.run_trace`` (continuous batching, energy-aware
-    admission, virtual clock). Requires an LLM-only trace (the ``voice``
-    scenario) and per-model (cfg, params).
+  * ``serving`` — LLM requests are served token-by-token through the
+    continuous-batching ``ServingEngine`` (batched prefill admission,
+    energy-aware admission, virtual clock) while vision frames run through
+    the graph path's ``AdaOperController`` on the same device — one merged
+    virtual timeline, so ``mixed`` (vision+LLM) diurnal traces replay
+    end-to-end. Requires per-LLM-model (cfg, params); models without a
+    serving worker resolve against the graph registry.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -37,15 +41,19 @@ _DEVICE_SEED_STRIDE = 7919
 
 
 def _require_models(trace: Trace, known, backend: str) -> None:
-    """Fail fast when a trace names models the backend cannot serve."""
+    """Fail fast when a trace names models the backend cannot serve. The
+    serving backend resolves against serving workers *and* the graph
+    registry (vision frames route to the graph path), so ``known`` is that
+    union for ``backend='serving'``."""
     missing = {r.model for r in trace} - set(known)
     if not missing:
         return
     if backend == "graph":
         raise ValueError(f"trace references unknown models {sorted(missing)}")
     raise ValueError(
-        f"serving backend has no workers for {sorted(missing)}; "
-        "use an LLM-only trace (scenario 'voice') or backend='graph'")
+        f"serving backend has neither a serving worker nor an operator "
+        f"graph for {sorted(missing)}; register the model in "
+        f"serving_models or the graph registry")
 
 
 def default_graph_registry() -> Dict[str, OpGraph]:
@@ -135,36 +143,117 @@ class DeviceReplay:
             counters["drift_events"] += st.drift_events
         return records, counters
 
-    def _run_serving(self, trace: Trace):
+    def _llm_request(self, trace: Trace, r):
+        """Deterministic synthetic prompt for one LLM trace request."""
         from repro.serving.engine import Request
 
-        _require_models(trace, self.engine.workers, "serving")
-        by_uid = {r.uid: r for r in trace}
-        arrivals = []
-        for r in trace:
-            vocab = self.engine.workers[r.model].cfg.vocab_size
-            rng = np.random.default_rng([trace.seed, r.uid])
-            prompt = rng.integers(1, vocab, max(r.prompt_len, 1),
-                                  dtype=np.int32)
-            arrivals.append((r.t_arrival_s, r.model,
-                             Request(r.uid, prompt,
-                                     max_new_tokens=max(r.max_new_tokens, 1))))
-        responses = self.engine.run_trace(arrivals)
-        records = []
-        for resp in responses:
-            r = by_uid[resp.uid]
-            records.append(RequestRecord(
-                uid=r.uid, model=r.model, priority=r.priority,
-                t_arrival_s=r.t_arrival_s,
-                t_done_s=r.t_arrival_s + resp.latency_s,
-                latency_s=resp.latency_s, energy_j=resp.energy_j_pred,
-                slo_s=r.slo_s, slo_met=resp.latency_s <= r.slo_s))
-        counters = {
+        vocab = self.engine.workers[r.model].cfg.vocab_size
+        rng = np.random.default_rng([trace.seed, r.uid])
+        prompt = rng.integers(1, vocab, max(r.prompt_len, 1), dtype=np.int32)
+        return Request(r.uid, prompt, max_new_tokens=max(r.max_new_tokens, 1))
+
+    def _response_record(self, trace_req, resp) -> RequestRecord:
+        return RequestRecord(
+            uid=trace_req.uid, model=trace_req.model,
+            priority=trace_req.priority, t_arrival_s=trace_req.t_arrival_s,
+            t_done_s=trace_req.t_arrival_s + resp.latency_s,
+            latency_s=resp.latency_s, energy_j=resp.energy_j_pred,
+            slo_s=trace_req.slo_s, slo_met=resp.latency_s <= trace_req.slo_s)
+
+    def _serving_counters(self, responses) -> Dict[str, int]:
+        return {
             "drift_events": self.engine.drift_events,
             "preemptions": sum(self.engine.preemptions.values()),
             "admission_denials": sum(
                 1 for d in self.engine.admission.log if not d["admit"]),
+            # rejected (error-Response) requests were never served: they are
+            # surfaced as a counter, not as records — a NaN energy must not
+            # poison the fleet aggregates or count toward SLO attainment
+            "rejected": sum(1 for r in responses if r.error is not None),
         }
+
+    def _run_serving(self, trace: Trace):
+        known = set(self.engine.workers) | set(self.graphs)
+        _require_models(trace, known, "serving")
+        if any(r.model not in self.engine.workers for r in trace):
+            return self._run_serving_mixed(trace)
+        by_uid = {r.uid: r for r in trace}
+        arrivals = [(r.t_arrival_s, r.model, self._llm_request(trace, r))
+                    for r in trace]
+        responses = self.engine.run_trace(arrivals)
+        records = [self._response_record(by_uid[resp.uid], resp)
+                   for resp in responses if resp.error is None]
+        return records, self._serving_counters(responses)
+
+    def _run_serving_mixed(self, trace: Trace):
+        """Mixed vision+LLM trace on one merged virtual timeline: LLM
+        requests stream through the continuous engine, vision/AR frames run
+        as one operator-graph inference each through the controller —
+        both advance the same clock, so queueing couples across modalities
+        the way co-execution does on a real device. Per outer iteration the
+        highest-priority arrived frame executes, then one engine round
+        serves the busy LLM workers."""
+        eng, sim = self.engine, self.sim
+        items = list(trace)  # time-sorted, uids in arrival order
+        by_uid = {r.uid: r for r in trace}
+        n_resident = len({r.model for r in trace})
+        records: List[RequestRecord] = []
+        responses: List = []
+        frames: List[Tuple] = []  # (-priority, t_arrival, uid) heap
+        t = 0.0
+        i = 0
+        eng._vtime = 0.0
+        try:
+            while True:
+                while i < len(items) and items[i].t_arrival_s <= t + 1e-12:
+                    r = items[i]
+                    if r.model in eng.workers:
+                        req = self._llm_request(trace, r)
+                        req.t_submit = r.t_arrival_s
+                        eng.queues[r.model].append(req)
+                    else:
+                        heapq.heappush(frames,
+                                       (-r.priority, r.t_arrival_s, r.uid))
+                    i += 1
+                busy = [m for m in eng.workers if eng._busy(m)]
+                if not frames and not busy:
+                    if i >= len(items):
+                        sim.set_coexec(1)
+                        break
+                    sim.advance_idle(items[i].t_arrival_s - t)
+                    t = items[i].t_arrival_s
+                    eng._vtime = t
+                    continue
+                if frames:
+                    _, t_arr, uid = heapq.heappop(frames)
+                    r = by_uid[uid]
+                    sim.set_coexec(n_resident)
+                    lat, en = self.controller.run_inference(self.graphs[r.model])
+                    sim.drain(en)
+                    t += lat
+                    eng._vtime = t
+                    records.append(RequestRecord(
+                        uid=uid, model=r.model, priority=r.priority,
+                        t_arrival_s=t_arr, t_done_s=t, latency_s=t - t_arr,
+                        energy_j=en, slo_s=r.slo_s,
+                        slo_met=(t - t_arr) <= r.slo_s))
+                    busy = [m for m in eng.workers if eng._busy(m)]
+                if busy:
+                    eng._serve_round(busy, responses)
+                    t = eng._vtime
+        finally:
+            eng._vtime = None
+        records.extend(self._response_record(by_uid[resp.uid], resp)
+                       for resp in responses if resp.error is None)
+        records.sort(key=lambda rec: rec.uid)
+        counters = self._serving_counters(responses)
+        for st in self.controller.stats.values():
+            counters["repartitions"] = (counters.get("repartitions", 0)
+                                        + st.repartitions)
+            counters["incremental"] = (counters.get("incremental", 0)
+                                       + st.incremental)
+            counters["graph_drift_events"] = (
+                counters.get("graph_drift_events", 0) + st.drift_events)
         return records, counters
 
 
@@ -202,10 +291,12 @@ class FleetReplay:
         for idx, profile in enumerate(self.population):
             trace = self.device_trace(idx)
             # fail before the expensive per-device calibration, for either
-            # backend (DeviceReplay re-checks for direct callers)
+            # backend (DeviceReplay re-checks for direct callers); serving
+            # resolves against workers AND graphs (vision frames route to
+            # the graph path)
             _require_models(trace,
                             graphs if self.backend == "graph"
-                            else (self.serving_models or {}),
+                            else set(self.serving_models or {}) | set(graphs),
                             self.backend)
             dr = DeviceReplay(profile, graphs,
                               calib_samples=self.calib_samples,

@@ -90,6 +90,18 @@ def write_cache_slot(pool_cache, one_cache, slot):
         pool_cache, one_cache)
 
 
+def write_cache_slots(pool_cache, group_cache, slots):
+    """Scatter every row of a batched prefill cache (batch=G) into the slot
+    rows named by ``slots`` (G,) int32 — the batched-admission counterpart of
+    :func:`write_cache_slot`. Rows whose slot index is out of range (the
+    pow2 batch-bucket padding rows) are dropped, so padding a prefill batch
+    never clobbers a live slot."""
+    return jax.tree.map(
+        lambda big, small: big.at[:, slots].set(small.astype(big.dtype),
+                                                mode="drop"),
+        pool_cache, group_cache)
+
+
 def prefill(params, cfg, inputs, cache, ctx=ExecContext(), enc_inputs=None):
     """Run the prompt through the model, writing mixer state into ``cache``.
     Returns (logits at every position, cache)."""
@@ -103,11 +115,15 @@ def prefill(params, cfg, inputs, cache, ctx=ExecContext(), enc_inputs=None):
     return lm_logits(params["embed"], x, cfg), cache
 
 
-def decode_step(params, cfg, token, cache, pos, ctx=ExecContext()):
+def decode_step(params, cfg, token, cache, pos, ctx=ExecContext(), enc_len=None):
     """token (B,1) int32; pos scalar int32 (position-synchronous batch) or
-    (B,) int32 per-sequence write positions (ragged continuous batching)."""
+    (B,) int32 per-sequence write positions (ragged continuous batching).
+    ``enc_len`` (enc-dec only): scalar or (B,) valid encoder-cache lengths —
+    a slot pool preallocates the cross-attention region at ``max_enc_len``,
+    so decode must mask each row's cross-attention to its own encoder
+    length. ``None`` keeps the exact-length (unmasked) reference semantics."""
     x = embed_tokens(params["embed"], token, cfg).astype(jnp.dtype(cfg.dtype))
     x, _, cache = tfm.apply_stack(params["stages"], cfg, x, ctx, mode="decode",
-                                  cache=cache, pos=pos)
+                                  cache=cache, pos=pos, enc_len=enc_len)
     x = apply_norm(params["final_norm"], x, cfg)
     return lm_logits(params["embed"], x, cfg), cache

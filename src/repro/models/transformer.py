@@ -113,7 +113,7 @@ def _window(cfg, kind):
 
 
 def apply_layer(lp, x, cfg, kind, mlp_kind, ctx, mode, cache, pos,
-                enc_out=None, causal=True):
+                enc_out=None, causal=True, enc_len=None):
     """Returns (x, aux, new_cache)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = dict(cache) if cache is not None else None
@@ -175,12 +175,21 @@ def apply_layer(lp, x, cfg, kind, mlp_kind, ctx, mode, cache, pos,
     if "cross" in lp:
         hc = apply_norm(lp["cross_norm"], x, cfg)
         if mode == "decode":
-            xo = att.gqa_cross(lp["cross"], hc, cfg, cache["xk"], cache["xv"], impl=ctx.attn_impl)
+            # enc_len masks rows to their own encoder length when the cache
+            # region is preallocated wider (slot pools); None = exact length
+            xo = att.gqa_cross(lp["cross"], hc, cfg, cache["xk"], cache["xv"],
+                               enc_len=enc_len, impl=ctx.attn_impl)
         else:
             ek, ev = att.cross_kv(lp["cross"], enc_out, cfg)
             xo = att.gqa_cross(lp["cross"], hc, cfg, ek, ev, impl=ctx.attn_impl)
             if mode == "prefill":
-                new_cache.update(xk=ek.astype(cache["xk"].dtype), xv=ev.astype(cache["xv"].dtype))
+                # slice-write so a cache preallocated at max_enc_len keeps its
+                # shape (a slot pool scatters whole rows); exact-length caches
+                # (the bucketed reference) are fully overwritten as before
+                new_cache["xk"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["xk"], ek.astype(cache["xk"].dtype), 0, axis=1)
+                new_cache["xv"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["xv"], ev.astype(cache["xv"].dtype), 0, axis=1)
         x = x + xo
 
     # ---- mlp ----
@@ -232,7 +241,7 @@ def init_stack_cache(cfg, batch, max_len, dtype, decoder_cross=False, enc_len=0)
 
 
 def apply_stack(stage_params, cfg, x, ctx, mode, cache=None, pos=0,
-                enc_out=None, cross=False):
+                enc_out=None, cross=False, enc_len=None):
     stages = compute_stages(cfg, cross=cross)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -248,7 +257,7 @@ def apply_stack(stage_params, cfg, x, ctx, mode, cache=None, pos=0,
                 xc, a, cj = apply_layer(
                     lp[f"l{j}"], xc, cfg, kind, mlp, ctx, mode,
                     cin[f"l{j}"] if cin is not None else None, pos,
-                    enc_out=enc_out, causal=not cross)
+                    enc_out=enc_out, causal=not cross, enc_len=enc_len)
                 aux = aux + a
                 cout[f"l{j}"] = cj
             return (xc, aux), (cout if sc is not None else None)

@@ -54,6 +54,21 @@ class Response:
     tokens: np.ndarray
     latency_s: float
     energy_j_pred: float
+    # set when the request was rejected instead of served (e.g. oversized
+    # prompt): the serving loop keeps draining, it never crashes mid-_admit
+    error: Optional[str] = None
+
+
+def _sample_rows(keys, idx, logits):
+    """One batched draw: token ``idx[b]`` of stream ``keys[b]`` from the
+    (already temperature-scaled) ``logits[b]``. The vmapped fold_in +
+    categorical is bit-identical to the scalar per-slot draws
+    (``tests/test_continuous_serving.py::test_vmapped_sampling_matches_scalar``),
+    so batching the per-slot loop preserves every seed⊕model⊕uid⊕token-index
+    stream exactly."""
+    def draw(k, i, row):
+        return jax.random.categorical(jax.random.fold_in(k, i), row)
+    return jax.vmap(draw)(keys, idx, logits)
 
 
 class SlotAllocator:
@@ -93,28 +108,43 @@ class SlotAllocator:
 
 class ModelWorker:
     def __init__(self, name: str, cfg, params, max_len: int = 512,
-                 ctx: ExecContext = ExecContext()):
+                 ctx: ExecContext = ExecContext(),
+                 max_enc_len: Optional[int] = None):
         self.name = name
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.ctx = ctx
+        # enc-dec slot pools preallocate the cross-attention cache region at
+        # this length; decoder-only models carry no encoder region
+        self.max_enc_len = (max_enc_len if max_enc_len is not None
+                            else (max_len if cfg.is_encoder_decoder else 0))
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._write = jax.jit(model_lib.write_cache_slot, donate_argnums=(0,))
+        self._write_many = jax.jit(model_lib.write_cache_slots,
+                                   donate_argnums=(0,))
 
     def _prefill_impl(self, params, cache, tokens, enc_inputs=None):
         logits, cache = model_lib.prefill(params, self.cfg, tokens, cache, self.ctx,
                                           enc_inputs=enc_inputs)
         return logits[:, -1], cache
 
-    def _decode_impl(self, params, cache, token, pos):
-        logits, cache = model_lib.decode_step(params, self.cfg, token, cache, pos, self.ctx)
+    def _decode_impl(self, params, cache, token, pos, enc_len=None):
+        logits, cache = model_lib.decode_step(params, self.cfg, token, cache,
+                                              pos, self.ctx, enc_len=enc_len)
         return logits[:, -1], cache
 
     def generate(self, prompts: np.ndarray, max_new: int,
-                 enc_inputs=None, temperature: float = 0.0, seed: int = 0):
-        """prompts (B, S) equal-length. Greedy (T=0) or sampled decode."""
+                 enc_inputs=None, temperature: float = 0.0, seed: int = 0,
+                 row_keys=None):
+        """prompts (B, S) equal-length. Greedy (T=0) or sampled decode.
+
+        ``row_keys`` (B, 2) uint32: per-request sampling streams — token i of
+        row b draws from ``fold_in(row_keys[b], i)``, matching the continuous
+        engine's seed⊕model⊕uid⊕token-index streams so both serving modes
+        emit identical sampled tokens. ``None`` keeps the legacy split-chain
+        RNG (shared across rows) seeded by ``seed``."""
         B, S = prompts.shape
         enc_len = enc_inputs.shape[1] if enc_inputs is not None else 0
         cache = model_lib.init_cache(self.cfg, B, self.max_len, enc_len=enc_len)
@@ -125,47 +155,77 @@ class ModelWorker:
             logits, cache = self._prefill(*args)
         out = np.zeros((B, max_new), np.int32)
         rng = jax.random.PRNGKey(seed)
-        tok = self._pick(logits, temperature, rng)
+        tok = self._pick(logits, temperature, rng, row_keys, 0)
         for i in range(max_new):
             out[:, i] = np.asarray(tok)[:, 0]
             if i == max_new - 1:
                 break
             logits, cache = self._decode(self.params, cache, tok, jnp.int32(S + i))
             rng, k = jax.random.split(rng)
-            tok = self._pick(logits, temperature, k)
+            tok = self._pick(logits, temperature, k, row_keys, i + 1)
         return out
 
     @staticmethod
-    def _pick(logits, temperature, rng):
+    def _pick(logits, temperature, rng, row_keys=None, token_idx=0):
         if temperature <= 0.0:
             return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        if row_keys is not None:
+            idx = jnp.full((row_keys.shape[0],), token_idx, jnp.uint32)
+            return _sample_rows(row_keys, idx,
+                                logits / temperature)[:, None].astype(jnp.int32)
         return jax.random.categorical(rng, logits / temperature)[:, None].astype(jnp.int32)
 
     # ---- continuous-batching primitives (slot-pool cache) ----
 
     def init_pool(self, max_slots: int):
-        """Preallocated KV/state cache with one row per request slot."""
-        return model_lib.init_cache(self.cfg, max_slots, self.max_len)
+        """Preallocated KV/state cache with one row per request slot (plus a
+        ``max_enc_len`` encoder cross-attention region for enc-dec models)."""
+        return model_lib.init_cache(self.cfg, max_slots, self.max_len,
+                                    enc_len=self.max_enc_len)
 
-    def prefill_one(self, prompt: np.ndarray):
+    def prefill_one(self, prompt: np.ndarray, enc_inputs=None):
         """Prefill a single request at its exact length. Returns
         (last-position logits (1,V), batch-1 cache to scatter into a slot)."""
-        cache = model_lib.init_cache(self.cfg, 1, self.max_len)
-        return self._prefill(self.params, cache, jnp.asarray(prompt[None]))
+        return self.prefill_batch(
+            prompt[None], None if enc_inputs is None else enc_inputs[None])
+
+    def prefill_batch(self, prompts: np.ndarray, enc_inputs=None):
+        """Batched admission prefill: ``prompts`` (G, S) equal-length (the
+        caller pads G to a pow2 bucket). Returns (last-position logits (G,V),
+        batch-G cache whose rows scatter into slots via ``write_slots``).
+        Every op is row-independent, so each row is bit-identical to a
+        ``prefill_one`` of the same prompt."""
+        G = prompts.shape[0]
+        cache = model_lib.init_cache(self.cfg, G, self.max_len,
+                                     enc_len=self.max_enc_len)
+        args = (self.params, cache, jnp.asarray(prompts))
+        if self.cfg.is_encoder_decoder:
+            return self._prefill(*args, jnp.asarray(enc_inputs))
+        return self._prefill(*args)
 
     def write_slot(self, pool_cache, one_cache, slot: int):
         return self._write(pool_cache, one_cache, slot)
 
-    def decode_pool(self, pool_cache, tokens: np.ndarray, pos: np.ndarray):
+    def write_slots(self, pool_cache, group_cache, slots: np.ndarray):
+        """Scatter a batched prefill cache into the rows named by ``slots``;
+        out-of-range entries (pow2 batch padding) are dropped."""
+        return self._write_many(pool_cache, group_cache,
+                                jnp.asarray(slots, dtype=jnp.int32))
+
+    def decode_pool(self, pool_cache, tokens: np.ndarray, pos: np.ndarray,
+                    enc_len=None):
         """One ragged decode step over the whole slot pool. ``tokens``
         (max_slots,1) int32, ``pos`` (max_slots,) int32 per-slot write
-        positions. Reuses the jitted decode body — a (B,) position vector
+        positions, ``enc_len`` (max_slots,) per-slot encoder lengths for
+        enc-dec models (masks each row's cross-attention to its own encoder
+        region). Reuses the jitted decode body — a (B,) position vector
         traces the ragged path in the model. Returns (greedy next tokens
         (max_slots,) np.int32, logits (max_slots, V) for per-slot sampling,
         cache)."""
-        logits, pool_cache = self._decode(self.params, pool_cache,
-                                          jnp.asarray(tokens),
-                                          jnp.asarray(pos, dtype=jnp.int32))
+        logits, pool_cache = self._decode(
+            self.params, pool_cache, jnp.asarray(tokens),
+            jnp.asarray(pos, dtype=jnp.int32),
+            None if enc_len is None else jnp.asarray(enc_len, dtype=jnp.int32))
         return (np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)),
                 logits, pool_cache)
 
@@ -379,6 +439,9 @@ class _SlotPool:
         self.active: Dict[int, _ActiveSeq] = {}
         self.tokens = np.zeros((max_slots, 1), np.int32)
         self.pos = np.zeros(max_slots, np.int32)
+        # per-slot valid encoder length (enc-dec models): decode masks each
+        # row's cross-attention to its own encoder region
+        self.enc_len = np.zeros(max_slots, np.int32)
 
 
 class ServingEngine:
@@ -387,7 +450,8 @@ class ServingEngine:
 
     def __init__(self, scheduler: Optional[AdaOperScheduler] = None,
                  mode: str = "continuous", max_slots: int = 8,
-                 slo_s: Optional[float] = None, sampling_seed: int = 0):
+                 slo_s: Optional[float] = None, sampling_seed: int = 0,
+                 batch_prefill: bool = True):
         if mode not in ("continuous", "bucketed"):
             raise ValueError(f"unknown serving mode {mode!r}")
         self.workers: Dict[str, ModelWorker] = {}
@@ -397,6 +461,12 @@ class ServingEngine:
         self.mode = mode
         self.max_slots = max_slots
         self.sampling_seed = sampling_seed
+        # batched admission: one bucketed prefill per same-shape group of
+        # approved requests; False keeps the serial batch-1 reference path
+        # (the way mode="bucketed" keeps the position-synchronous engine)
+        self.batch_prefill = batch_prefill
+        self.prefill_batches = 0
+        self.prefill_batch_requests = 0
         self.admission = AdmissionPolicy(scheduler, slo_s=slo_s)
         self.pools: Dict[str, _SlotPool] = {}
         self.priorities: Dict[str, int] = {}
@@ -425,17 +495,37 @@ class ServingEngine:
     def _sample(self, model: str, seq: _ActiveSeq, logits,
                 temperature: float) -> int:
         """Sample token #len(seq.tokens) of ``seq``'s stream from (V,)
-        logits. The stream is established lazily so a sequence admitted
-        greedily can switch to sampled decode mid-flight (same uid-derived
-        stream either way)."""
+        logits — the scalar reference for ``_sample_batch``. The stream is
+        established lazily so a sequence admitted greedily can switch to
+        sampled decode mid-flight (same uid-derived stream either way)."""
         if seq.rng is None:
             seq.rng = self._stream_key(model, seq.req.uid)
         k = jax.random.fold_in(seq.rng, len(seq.tokens))
         return int(jax.random.categorical(k, jnp.asarray(logits) / temperature))
 
+    def _sample_batch(self, model: str, seqs: List[_ActiveSeq], logits,
+                      temperature: float) -> List[int]:
+        """One vmapped draw for many sequences: token #len(seq.tokens) of
+        each seq's stream from its (V,) logits row — bit-identical to
+        per-slot ``_sample`` calls, with one dispatch and one host sync
+        instead of len(seqs)."""
+        for seq in seqs:
+            if seq.rng is None:
+                seq.rng = self._stream_key(model, seq.req.uid)
+        keys = jnp.stack([seq.rng for seq in seqs])
+        idx = jnp.asarray([len(seq.tokens) for seq in seqs], jnp.uint32)
+        toks = _sample_rows(keys, idx, jnp.asarray(logits) / temperature)
+        return [int(t) for t in np.asarray(toks)]
+
+    def _row_keys(self, model: str, reqs: List[Request]):
+        """Stacked per-request sampling streams for the bucketed path, so
+        sampled decode is token-identical to the continuous engine."""
+        return jnp.stack([self._stream_key(model, r.uid) for r in reqs])
+
     def add_model(self, name, cfg, params, max_len=512, ctx=ExecContext(),
-                  priority: int = 0):
-        self.workers[name] = ModelWorker(name, cfg, params, max_len, ctx)
+                  priority: int = 0, max_enc_len: Optional[int] = None):
+        self.workers[name] = ModelWorker(name, cfg, params, max_len, ctx,
+                                         max_enc_len=max_enc_len)
         self.queues[name] = []
         self.stats[name] = []
         self.priorities[name] = priority
@@ -474,8 +564,12 @@ class ServingEngine:
         prompts = np.stack([r.prompt for r in batch])
         enc = (np.stack([r.enc_inputs for r in batch])
                if batch[0].enc_inputs is not None else None)
+        # sampled decode draws every row from its uid-derived stream, so
+        # bucketed and continuous modes emit identical sampled tokens
+        row_keys = (self._row_keys(model, batch) if temperature > 0.0 else None)
         t0 = time.time()
-        toks = w.generate(prompts, max_new, enc_inputs=enc, temperature=temperature)
+        toks = w.generate(prompts, max_new, enc_inputs=enc,
+                          temperature=temperature, row_keys=row_keys)
         dt = time.time() - t0
         self.stats[model].append({"batch": bsz, "wall_s": dt,
                                   "pred_energy_j": choice["energy"]})
@@ -506,13 +600,15 @@ class ServingEngine:
                 self.workers[model].cfg, batch, seq_len, max_new)
         return plan
 
-    def _prefill_plan_for(self, model: str, prompt_len: int):
+    def _prefill_plan_for(self, model: str, batch: int, prompt_len: int):
+        """Admission (prefill) plan served from the drift-scoped memo; the
+        batched admission path charges one bucketed-batch plan per group."""
         sch = self.scheduler
-        key = ("pre", model, sch._len_bucket(prompt_len))
+        key = ("pre", model, sch._new_bucket(batch), sch._len_bucket(prompt_len))
         plan = self._plan_memo.get(key)
         if plan is None:
             plan = self._plan_memo[key] = sch.prefill_plan(
-                self.workers[model].cfg, 1, prompt_len)
+                self.workers[model].cfg, batch, prompt_len)
         return plan
 
     def _drift_event(self) -> bool:
@@ -567,18 +663,41 @@ class ServingEngine:
                             np.asarray(seq.tokens[: seq.req.max_new_tokens], np.int32),
                             self._now() - seq.req.t_submit, energy))
 
+    def _validate(self, w: ModelWorker, req: Request) -> Optional[str]:
+        """Reason the request can never be served by ``w``, or None."""
+        if len(req.prompt) + req.max_new_tokens > w.max_len:
+            return (f"prompt {len(req.prompt)} + max_new "
+                    f"{req.max_new_tokens} exceeds max_len {w.max_len}")
+        if w.cfg.is_encoder_decoder:
+            if req.enc_inputs is None:
+                return "encoder-decoder request without enc_inputs"
+            if req.enc_inputs.shape[0] > w.max_enc_len:
+                return (f"enc_inputs length {req.enc_inputs.shape[0]} "
+                        f"exceeds max_enc_len {w.max_enc_len}")
+        return None
+
     def _admit(self, model: str, pool: _SlotPool, out: List[Response],
                temperature: float = 0.0) -> int:
         """Token-granularity admission: pull waiting requests into free slots
-        while the energy-aware policy approves. Returns #admitted."""
+        while the energy-aware policy approves, then prefill the approved
+        set in bucketed same-shape batches (``batch_prefill=False`` keeps
+        the serial batch-1 reference). A request that can never be served
+        (oversized, missing encoder inputs) is rejected with an error
+        ``Response`` and the loop keeps draining — it must not crash the
+        serving loop and strand the queue. Returns #admitted."""
         w, q = self.workers[model], self.queues[model]
-        n_admitted = 0
+        admitted: List[_ActiveSeq] = []
         while q and pool.alloc.n_free:
             req = q[0]
-            if len(req.prompt) + req.max_new_tokens > w.max_len:
-                raise ValueError(
-                    f"request {req.uid}: prompt {len(req.prompt)} + "
-                    f"max_new {req.max_new_tokens} exceeds max_len {w.max_len}")
+            err = self._validate(w, req)
+            if err is not None:
+                q.pop(0)
+                self.admission._record(False, f"invalid: {err}",
+                                       len(pool.active), req.uid)
+                out.append(Response(req.uid, np.zeros(0, np.int32),
+                                    self._now() - req.t_submit, float("nan"),
+                                    error=err))
+                continue
             seq_len, max_new = self._plan_shape(pool, extra=req)
             plan_fn = (None if self.scheduler is None else
                        (lambda b: self._plan_for(model, b, seq_len, max_new)))
@@ -590,29 +709,71 @@ class ServingEngine:
                 break
             q.pop(0)
             slot = pool.alloc.alloc()
-            logits, one_cache = w.prefill_one(req.prompt)
-            pool.cache = w.write_slot(pool.cache, one_cache, slot)
             seq = _ActiveSeq(req, slot, pos=len(req.prompt))
-            if temperature > 0.0:
-                tok = self._sample(model, seq, logits[0], temperature)
-            else:
-                tok = int(np.asarray(jnp.argmax(logits[0], -1)))
-            seq.tokens.append(tok)
-            if self.scheduler is not None:
-                pp = self._prefill_plan_for(model, len(req.prompt))
-                seq.energy_j += pp["energy"]
-                self.scheduler.sim.drain(pp["energy"])
-                if self._vtime is not None:
-                    # virtual replay charges prefill at the planner's
-                    # predicted latency (wall-clock mode measures it)
-                    self._vtime += pp["latency"]
+            # resident immediately so the next decision's plan shape sees it
             pool.active[slot] = seq
-            pool.tokens[slot, 0] = tok
-            pool.pos[slot] = seq.pos
-            n_admitted += 1
-            if len(seq.tokens) >= req.max_new_tokens:
+            admitted.append(seq)
+        if self.batch_prefill:
+            groups: Dict[tuple, List[_ActiveSeq]] = {}
+            for seq in admitted:
+                enc = seq.req.enc_inputs
+                key = (len(seq.req.prompt),
+                       None if enc is None else enc.shape)
+                groups.setdefault(key, []).append(seq)
+            group_list = list(groups.values())
+        else:
+            group_list = [[seq] for seq in admitted]
+        for group in group_list:
+            self._prefill_group(model, pool, group, out, temperature)
+        return len(admitted)
+
+    def _prefill_group(self, model: str, pool: _SlotPool,
+                       group: List[_ActiveSeq], out: List[Response],
+                       temperature: float) -> None:
+        """One bucketed prefill for a same-shape group of admitted requests:
+        the batch is padded to a pow2 bucket (bounding jit compiles), the
+        resulting caches scatter into the slots in one ``write_slots`` call
+        (padding rows are dropped), and the admission plan is charged once
+        per bucket — per-request energy normalised by the plan's bucketed
+        batch, the virtual clock advanced by one bucket latency."""
+        w = self.workers[model]
+        G = len(group)
+        b = AdaOperScheduler._new_bucket(G)
+        pad = b - G
+        prompts = np.stack([s.req.prompt for s in group]
+                           + [group[0].req.prompt] * pad)
+        enc = None
+        if group[0].req.enc_inputs is not None:
+            enc = np.stack([s.req.enc_inputs for s in group]
+                           + [group[0].req.enc_inputs] * pad)
+        logits, g_cache = w.prefill_batch(prompts, enc)
+        slots = np.full(b, pool.alloc.n_slots, np.int32)  # pads drop
+        slots[:G] = [s.slot for s in group]
+        pool.cache = w.write_slots(pool.cache, g_cache, slots)
+        if temperature > 0.0:
+            toks = self._sample_batch(model, group, logits[:G], temperature)
+        else:
+            toks = [int(t) for t in np.asarray(jnp.argmax(logits[:G], -1))]
+        pp = None
+        if self.scheduler is not None:
+            pp = self._prefill_plan_for(model, G, len(group[0].req.prompt))
+            self.scheduler.sim.drain(pp["energy"] * G / pp["batch"])
+            if self._vtime is not None:
+                # virtual replay charges the whole bucket at the planner's
+                # predicted latency (wall-clock mode measures it)
+                self._vtime += pp["latency"]
+        for seq, tok in zip(group, toks):
+            seq.tokens.append(tok)
+            if pp is not None:
+                seq.energy_j += pp["energy"] / pp["batch"]
+            pool.tokens[seq.slot, 0] = tok
+            pool.pos[seq.slot] = seq.pos
+            pool.enc_len[seq.slot] = (0 if seq.req.enc_inputs is None
+                                      else seq.req.enc_inputs.shape[0])
+            if len(seq.tokens) >= seq.req.max_new_tokens:
                 self._retire(pool, seq, out)
-        return n_admitted
+        self.prefill_batches += 1
+        self.prefill_batch_requests += G
 
     def step_continuous(self, model: str, decode: bool = True,
                         check_drift: bool = True,
@@ -625,18 +786,18 @@ class ServingEngine:
         ``temperature > 0`` samples each slot from its own seed-derived RNG
         stream (reproducible under any admission order)."""
         w = self.workers[model]
-        if w.cfg.is_encoder_decoder:
-            # enc-dec needs per-slot encoder caches; serve via the reference path
-            return self.step(model, temperature)
         if check_drift and self.scheduler is not None:
             self._drift_event()  # direct drivers still invalidate stale plans
         pool = self._pool(model)
         out: List[Response] = []
-        t0 = time.time()
+        # under the virtual clock the iteration is timed in _vtime deltas
+        # (predicted latencies), not host speed; wall mode measures wall time
+        t0 = self._now()
         n_admitted = self._admit(model, pool, out, temperature)
         if decode and pool.active:
+            enc_len = pool.enc_len if w.cfg.is_encoder_decoder else None
             next_tok, logits, pool.cache = w.decode_pool(pool.cache, pool.tokens,
-                                                         pool.pos)
+                                                         pool.pos, enc_len=enc_len)
             n_active = len(pool.active)
             step_energy = 0.0
             if self.scheduler is not None:
@@ -650,9 +811,15 @@ class ServingEngine:
                 self.scheduler.sim.drain(step_energy * n_active / sp["batch"])
                 if self._vtime is not None:
                     self._vtime += sp["step_latency"]
-            for seq in list(pool.active.values()):
-                tok = (self._sample(model, seq, logits[seq.slot], temperature)
-                       if temperature > 0.0 else int(next_tok[seq.slot]))
+            seqs = list(pool.active.values())
+            if temperature > 0.0:
+                # gather active rows on device: the host only ever sees the
+                # sampled tokens, not the whole (max_slots, V) logits
+                rows = logits[jnp.asarray([seq.slot for seq in seqs])]
+                toks = self._sample_batch(model, seqs, rows, temperature)
+            else:
+                toks = [int(next_tok[seq.slot]) for seq in seqs]
+            for seq, tok in zip(seqs, toks):
                 seq.tokens.append(tok)
                 seq.pos += 1
                 if self.scheduler is not None:
@@ -666,7 +833,7 @@ class ServingEngine:
             self.stats[model].append({
                 "mode": "continuous", "active": len(pool.active),
                 "admitted": n_admitted, "retired": len(out),
-                "wall_s": time.time() - t0,
+                "wall_s": self._now() - t0,
                 "pred_energy_j": float(sum(r.energy_j_pred for r in out))
                 if self.scheduler is not None else float("nan")})
         return out
@@ -744,15 +911,6 @@ class ServingEngine:
             raise ValueError(
                 f"run_trace arrivals name models with no registered worker: "
                 f"{sorted(unknown)}")
-        encdec = sorted(m for m in models
-                        if self.workers[m].cfg.is_encoder_decoder)
-        if encdec:
-            # enc-dec serves via the wall-clock bucketed fallback, which
-            # would silently mix wall time into the virtual-time records
-            raise ValueError(
-                f"run_trace cannot serve encoder-decoder models {encdec}: "
-                f"they fall back to the bucketed path, whose latencies are "
-                f"wall-clock (the virtual clock never advances)")
         sim = self.scheduler.sim
         out: List[Response] = []
         self._vtime = float(start_t)

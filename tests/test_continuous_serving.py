@@ -110,13 +110,168 @@ def test_bucketed_flag_keeps_reference_path(tiny):
         np.testing.assert_array_equal(res["bucketed"][uid], res["continuous"][uid])
 
 
-def test_oversized_request_rejected(tiny):
+def test_oversized_request_rejected_without_stranding_queue(tiny):
+    """An unservable request must NOT crash the serving loop: it is rejected
+    with an error Response and every other queued request still completes."""
     cfg, params = tiny
     eng = ServingEngine(mode="continuous", max_slots=2)
     eng.add_model("m", cfg, params, max_len=32)
-    eng.submit("m", Request(0, np.ones(30, np.int32), max_new_tokens=8))
-    with pytest.raises(ValueError, match="exceeds max_len"):
-        eng.run_all()
+    r = np.random.default_rng(0)
+    good_before = Request(0, r.integers(1, cfg.vocab_size, 12, dtype=np.int32), 4)
+    oversized = Request(1, np.ones(30, np.int32), max_new_tokens=8)
+    good_after = Request(2, r.integers(1, cfg.vocab_size, 12, dtype=np.int32), 3)
+    for req in (good_before, oversized, good_after):
+        eng.submit("m", req)
+    res = {x.uid: x for x in eng.run_all()}
+    assert sorted(res) == [0, 1, 2]  # nothing stranded, nothing dropped
+    assert "exceeds max_len" in res[1].error
+    assert res[1].tokens.shape == (0,)
+    assert res[0].error is None and res[0].tokens.shape == (4,)
+    assert res[2].error is None and res[2].tokens.shape == (3,)
+    # the rejection is visible in the admission log with its reason
+    assert any(d["uid"] == 1 and not d["admit"] for d in eng.admission.log)
+
+
+def test_encdec_request_without_enc_inputs_rejected(tiny):
+    cfg = reduced(get_config("seamless-m4t-medium"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(mode="continuous", max_slots=2)
+    eng.add_model("m", cfg, params, max_len=32, max_enc_len=8)
+    eng.submit("m", Request(0, np.ones(4, np.int32), max_new_tokens=2))
+    (resp,) = eng.run_all()
+    assert "without enc_inputs" in resp.error
+
+
+# ---------------------------------------------------------------------------
+# batched prefill admission
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_batch_bit_identical_to_prefill_one(tiny):
+    """Bucketed admission prefill: every row of one batched prefill call is
+    bit-identical (logits AND cache leaves) to a serial prefill_one of the
+    same prompt."""
+    cfg, params = tiny
+    w = ModelWorker("m", cfg, params, max_len=48)
+    r = np.random.default_rng(2)
+    prompts = r.integers(1, cfg.vocab_size, (3, 14), dtype=np.int32)
+    logits_b, cache_b = w.prefill_batch(prompts)
+    for i in range(3):
+        logits_1, cache_1 = w.prefill_one(prompts[i])
+        np.testing.assert_array_equal(np.asarray(logits_b[i]),
+                                      np.asarray(logits_1[0]))
+        for leaf_b, leaf_1 in zip(jax.tree.leaves(cache_b),
+                                  jax.tree.leaves(cache_1)):
+            np.testing.assert_array_equal(np.asarray(leaf_b[:, i]),
+                                          np.asarray(leaf_1[:, 0]))
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_batched_admission_token_identical_to_serial(tiny, temperature):
+    """batch_prefill=False keeps the serial batch-1 admission reference;
+    the batched path must serve every request token-identically (greedy and
+    sampled), and must actually batch same-length groups."""
+    cfg, params = tiny
+
+    def serve(batch_prefill):
+        eng = ServingEngine(mode="continuous", max_slots=8,
+                            sampling_seed=5, batch_prefill=batch_prefill)
+        eng.add_model("m", cfg, params, max_len=48)
+        for r in _mixed_requests(cfg, seed=13):
+            eng.submit("m", r)
+        res = {r.uid: r.tokens for r in eng.run_all(temperature=temperature)}
+        return res, eng
+
+    batched, eng_b = serve(True)
+    serial, eng_s = serve(False)
+    assert set(batched) == set(serial)
+    for uid in batched:
+        np.testing.assert_array_equal(batched[uid], serial[uid])
+    # MIXED holds three same-length pairs: batching must merge prefills
+    assert eng_b.prefill_batches < eng_s.prefill_batches
+    assert eng_b.prefill_batch_requests == len(MIXED)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder slot caches (continuous path, no bucketed fallback)
+# ---------------------------------------------------------------------------
+
+
+def _encdec_requests(cfg, n=4, seed=3):
+    r = np.random.default_rng(seed)
+    shapes = [(6, 9, 4), (10, 5, 3), (6, 9, 2), (8, 7, 5)][:n]
+    return [Request(i, r.integers(1, cfg.vocab_size, plen, dtype=np.int32), mn,
+                    enc_inputs=r.normal(size=(tlen, cfg.d_model)).astype(np.float32))
+            for i, (plen, tlen, mn) in enumerate(shapes)]
+
+
+def test_encdec_continuous_matches_reference():
+    """Enc-dec models serve on the continuous path (per-slot encoder cache
+    regions masked to each row's encoder length) token-identically to the
+    reference generate path — no more bucketed fallback."""
+    cfg = reduced(get_config("seamless-m4t-medium"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _encdec_requests(cfg)
+    eng = ServingEngine(mode="continuous", max_slots=3)
+    eng.add_model("m", cfg, params, max_len=32, max_enc_len=16)
+    for req in reqs:
+        eng.submit("m", req)
+    res = {x.uid: x.tokens for x in eng.run_all()}
+    # served through the slot pool, not the bucketed step() fallback
+    assert "m" in eng.pools and eng.pools["m"].alloc.n_slots == 3
+    assert all(s.get("mode") == "continuous" for s in eng.stats["m"])
+    ref = ModelWorker("ref", cfg, params, max_len=32)
+    for req in reqs:
+        want = ref.generate(req.prompt[None], req.max_new_tokens,
+                            enc_inputs=req.enc_inputs[None])[0]
+        np.testing.assert_array_equal(res[req.uid], want)
+
+
+# ---------------------------------------------------------------------------
+# vmapped per-slot sampling
+# ---------------------------------------------------------------------------
+
+
+def test_vmapped_sampling_matches_scalar():
+    """One batched jax.random.categorical over stacked fold-in keys must
+    reproduce the scalar per-slot draws bit-for-bit (same seed⊕model⊕uid⊕
+    token-index streams)."""
+    from repro.serving.engine import _ActiveSeq
+
+    eng = ServingEngine(mode="continuous", sampling_seed=11)
+    rng = np.random.default_rng(4)
+    seqs = []
+    for uid, n_emitted in [(3, 0), (17, 2), (256, 5)]:
+        seq = _ActiveSeq(Request(uid, np.ones(4, np.int32), 8), slot=uid % 4,
+                         pos=4)
+        seq.tokens = [1] * n_emitted
+        seqs.append(seq)
+    logits = rng.normal(size=(len(seqs), 64)).astype(np.float32)
+    scalar = [eng._sample("m", seq, logits[i], 0.7)
+              for i, seq in enumerate(seqs)]
+    # fresh seqs so _sample_batch re-derives the streams itself
+    for seq in seqs:
+        seq.rng = None
+    batched = eng._sample_batch("m", seqs, logits, 0.7)
+    assert batched == scalar
+
+
+def test_sampled_bucketed_matches_continuous(tiny):
+    """Sampled decode is unified on the per-request uid-derived streams:
+    mode='bucketed' and mode='continuous' emit identical tokens at
+    temperature>0 (the token-identity guarantee now covers sampling)."""
+    cfg, params = tiny
+    res = {}
+    for mode in ("bucketed", "continuous"):
+        eng = ServingEngine(mode=mode, max_slots=4, sampling_seed=9)
+        eng.add_model("m", cfg, params, max_len=48)
+        for r in _mixed_requests(cfg, seed=21):
+            eng.submit("m", r)
+        res[mode] = {r.uid: r.tokens for r in eng.run_all(temperature=0.8)}
+    assert set(res["bucketed"]) == set(res["continuous"])
+    for uid in res["bucketed"]:
+        np.testing.assert_array_equal(res["bucketed"][uid],
+                                      res["continuous"][uid])
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +423,34 @@ def test_run_trace_requires_scheduler(tiny):
     eng.add_model("m", cfg, params, max_len=48)
     with pytest.raises(ValueError, match="run_trace"):
         eng.run_trace([])
+
+
+def test_run_trace_stats_use_virtual_time(sched, tiny, monkeypatch):
+    """Under the virtual clock, per-iteration stats must be _vtime deltas
+    (predicted latencies), not host speed: here the host clock jumps 1000 s
+    per call, which would poison every wall_s if the engine read it."""
+    cfg, params = tiny
+    import repro.serving.engine as engine_mod
+
+    t = [1e6]
+
+    def fake_time():
+        t[0] += 1000.0
+        return t[0]
+
+    monkeypatch.setattr(engine_mod.time, "time", fake_time)
+    eng = ServingEngine(scheduler=sched, mode="continuous", max_slots=2)
+    eng.add_model("m", cfg, params, max_len=48)
+    r = np.random.default_rng(6)
+    arrivals = [(0.01 * i, "m",
+                 Request(i, r.integers(1, cfg.vocab_size, 8, dtype=np.int32), 2))
+                for i in range(3)]
+    res = eng.run_trace(arrivals)
+    assert len(res) == 3
+    rows = [s for s in eng.stats["m"] if s.get("mode") == "continuous"]
+    assert rows
+    for s in rows:
+        assert 0.0 <= s["wall_s"] < 1.0  # virtual seconds, not host clock
 
 
 def test_run_trace_rejects_unknown_model(sched, tiny):

@@ -250,7 +250,75 @@ def test_serving_backend_serves_voice_trace():
     assert once().to_dict() == rep.to_dict()
 
 
-def test_serving_backend_rejects_vision_trace():
+def test_serving_backend_serves_mixed_trace():
+    """The serving backend replays the mixed (vision+LLM) diurnal trace on
+    one merged virtual timeline: vision/AR frames run through the graph
+    path, LLM requests stream through the continuous engine — every arrival
+    served, both modalities in the records, deterministically."""
+    jax = pytest.importorskip("jax")
+    from repro.configs.base import get_config, reduced
+    from repro.fleet.replay import DeviceReplay, default_graph_registry
+    from repro.fleet.workloads import AR, VISION
+    from repro.models import init_params
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pop = sample_population(1, seed=1)
+    trace = make_trace("mixed", 3.0, seed=2)
+    by_model = trace.summary()["per_model"]
+    assert by_model.get(ASSISTANT, 0) > 0  # the trace must mix modalities
+    assert by_model.get(VISION, 0) + by_model.get(AR, 0) > 0
+
+    def once():
+        dr = DeviceReplay(pop[0], default_graph_registry(),
+                          calib_samples=120, backend="serving",
+                          serving_models={ASSISTANT: (cfg, params)})
+        records, counters = dr.run(trace)
+        return records, counters, dr
+
+    records, counters, dr = once()
+    assert sorted(r.uid for r in records) == list(range(len(trace)))
+    served_models = {r.model for r in records}
+    assert ASSISTANT in served_models  # LLM requests went through the engine
+    assert served_models & {VISION, AR}  # frames went through the graph path
+    assert "repartitions" in counters  # graph-path counters surfaced
+    assert all(np.isfinite(r.latency_s) and r.latency_s >= 0 for r in records)
+    assert dr.metrics(records, counters).battery_end_pct < 100.0
+    # one merged virtual timeline is deterministic run-to-run
+    records2, counters2, _ = once()
+    assert records == records2 and counters == counters2
+
+
+def test_serving_backend_rejected_request_counted_not_recorded():
+    """A request the engine can never serve (oversized for the worker) is
+    rejected with an error Response; the fleet rollup must surface it as a
+    counter, not as a served record — no NaN energy in the aggregates, no
+    phantom SLO attainment."""
+    jax = pytest.importorskip("jax")
+    from repro.configs.base import get_config, reduced
+    from repro.fleet.replay import DeviceReplay, default_graph_registry
+    from repro.fleet.workloads import ASSISTANT_SLO_S, Trace, TraceRequest
+    from repro.models import init_params
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pop = sample_population(1, seed=1)
+    trace = Trace("voice", 0, 5.0, (
+        TraceRequest(0, 0.1, ASSISTANT, ASSISTANT_SLO_S, 1,
+                     prompt_len=60, max_new_tokens=30),  # > max_len=64
+        TraceRequest(1, 0.2, ASSISTANT, ASSISTANT_SLO_S, 1,
+                     prompt_len=10, max_new_tokens=3),
+    ))
+    dr = DeviceReplay(pop[0], default_graph_registry(), calib_samples=120,
+                      backend="serving",
+                      serving_models={ASSISTANT: (cfg, params)})
+    records, counters = dr.run(trace)
+    assert counters["rejected"] == 1
+    assert [r.uid for r in records] == [1]
+    assert all(np.isfinite(r.energy_j) for r in records)
+
+
+def test_serving_backend_rejects_model_unknown_to_both_registries():
     jax = pytest.importorskip("jax")
     from repro.configs.base import get_config, reduced
     from repro.models import init_params
@@ -258,10 +326,11 @@ def test_serving_backend_rejects_vision_trace():
     cfg = reduced(get_config("tinyllama-1.1b"))
     params = init_params(jax.random.PRNGKey(0), cfg)
     pop = sample_population(1, seed=0)
+    # empty graph registry: the video trace's vision frames resolve nowhere
     replay = FleetReplay(pop, scenario="video", duration_s=2.0, seed=0,
-                         calib_samples=120, backend="serving",
+                         calib_samples=120, backend="serving", graphs={},
                          serving_models={ASSISTANT: (cfg, params)})
-    with pytest.raises(ValueError, match="no workers"):
+    with pytest.raises(ValueError, match="neither a serving worker nor"):
         replay.run()
 
 

@@ -383,7 +383,8 @@ def test_engine_queue_drain_order_preserving():
     class _StubWorker:
         cfg = None
 
-        def generate(self, prompts, max_new, enc_inputs=None, temperature=0.0):
+        def generate(self, prompts, max_new, enc_inputs=None, temperature=0.0,
+                     row_keys=None):
             return np.zeros((prompts.shape[0], max_new), np.int32)
 
     eng = ServingEngine()
