@@ -36,6 +36,7 @@ from repro.core import (
     build_yolo_graph,
     codl_plan,
     mace_gpu_plan,
+    telemetry,
 )
 
 N_INFER = 60
@@ -136,12 +137,14 @@ def _run_mode(mode, cfg, params, profiler, reqs, batch_prefill=True):
 
     submit()
     eng.run_all()  # warmup: jit compiles excluded from the measured pass
-    # reset counters so the measured record reflects the measured pass only
+    # reset counters + ledger so the measured record reflects the measured
+    # pass only (telemetry folds below read the ledger, not the responses)
     eng.preemptions = {k: 0 for k in eng.preemptions}
     eng.drift_events = 0
     eng.prefill_batches = 0
     eng.prefill_batch_requests = 0
     eng.admission.log.clear()
+    eng.ledger.clear()
     submit()
     t0 = time.time()
     responses = eng.run_all()
@@ -150,11 +153,19 @@ def _run_mode(mode, cfg, params, profiler, reqs, batch_prefill=True):
     tokens = {r.uid: np.asarray(r.tokens).tolist() for r in responses}
     lats = np.array([r.latency_s for r in responses])
     n_tok = sum(len(t) for t in tokens.values())
+    # energy aggregates fold out of the telemetry ledger (one `request`
+    # event per served request; rejected requests emit `rejected` events
+    # instead) — the same stream the fleet report reads
+    req_events = eng.ledger.requests()
+    assert len(req_events) == sum(1 for r in responses if r.error is None)
+    rails = telemetry.fold_energy(req_events)
     rec = {
         "wall_s": wall,
         "throughput_tok_s": n_tok / wall,
         "p95_latency_s": float(np.percentile(lats, 95)),
-        "mean_energy_j_per_req": float(np.mean([r.energy_j_pred for r in responses])),
+        "mean_energy_j_per_req": float(np.mean([ev.energy.total_j
+                                                for ev in req_events])),
+        "energy_rails_j": rails.rails_dict(),
         "responses": len(responses),
         "generated_tokens": n_tok,
     }
@@ -170,8 +181,8 @@ def serving(json_path=None, smoke=False, baseline_path=BASELINE_PATH, emit=print
     """Bucketed vs continuous serving on one mixed request set."""
     import jax
 
-    from repro.core.opgraph import build_transformer_graph
     from repro.configs.base import get_config, reduced
+    from repro.core.opgraph import build_transformer_graph
     from repro.models import init_params
 
     cfg = reduced(get_config("tinyllama-1.1b"))
@@ -215,6 +226,9 @@ def serving(json_path=None, smoke=False, baseline_path=BASELINE_PATH, emit=print
     emit(f"serving_batched_vs_serial_admission,,speedup={admission_speedup:.2f};"
          f"prefill_batches={modes['continuous']['prefill_batches']};"
          f"batched_requests={modes['continuous']['prefill_batch_requests']}")
+    cr = modes["continuous"]["energy_rails_j"]
+    emit(f"serving_continuous_energy_rails,,cpu_mJ={cr['cpu']*1e3:.3f};"
+         f"gpu_mJ={cr['gpu']*1e3:.3f};bus_mJ={cr['bus']*1e3:.3f}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)

@@ -7,20 +7,22 @@
 Samples a heterogeneous device population (flagship/mid/low tiers), replays
 one scenario trace per device through the full AdaOper closed loop in
 virtual time (``repro.fleet``), and emits per-device + fleet-aggregate
-metrics: energy per request, battery drain, SLO attainment and latency
-p50/p95/p99. Run-to-run deterministic in ``(devices, scenario, seed,
-duration, backend)``. ``--backend serving`` streams LLM requests through
-the continuous-batching ServingEngine (vision frames take the graph path
-on the same virtual timeline), so ``mixed`` traces exercise the full
-vision+LLM co-execution scenario.
+metrics: energy per request (with the per-rail cpu/gpu/bus attribution
+folded from the telemetry ledger), battery drain, SLO attainment and
+latency p50/p95/p99. Run-to-run deterministic in ``(devices, scenario,
+seed, duration, backend)``. ``--backend serving`` streams LLM requests
+through the continuous-batching ServingEngine (vision frames take the
+graph path on the same virtual timeline), so ``mixed`` traces exercise the
+full vision+LLM co-execution scenario.
 
 Smoke mode (``benchmarks/run.py --smoke`` and the CI ``fleet-smoke`` step)
-runs two fixed configurations — the 2-device/6s graph replay and the
-1-device/3s mixed serving replay — and gates each against its committed
-baseline (``benchmarks/baselines/BENCH_fleet.json`` /
-``BENCH_fleet_serving.json``): identical request count (the replay is
-deterministic), fleet energy/request within ±25%, and SLO attainment no
-more than 0.15 below the baseline (``benchmarks/baseline_gate.gate_fleet``).
+runs four fixed configurations — the 2-device/6s mixed graph replay, the
+1-device/3s mixed serving replay, and the per-scenario 1-device voice and
+video graph replays — gating each against its committed baseline
+(``benchmarks/baselines/BENCH_fleet*.json``): identical request count (the
+replay is deterministic), fleet energy/request within ±25%, and SLO
+attainment no more than 0.15 below the baseline
+(``benchmarks/baseline_gate.gate_fleet``).
 """
 from __future__ import annotations
 
@@ -38,21 +40,47 @@ SERVING_BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_fleet_serving.json")
 SMOKE = dict(devices=2, scenario="mixed", seed=0, duration=6.0, calib=250)
 SERVING_SMOKE = dict(devices=1, scenario="mixed", seed=2, duration=3.0,
                      calib=120)
+# per-scenario baselines beyond `mixed` (ROADMAP open item): one device
+# each, sized so the whole family stays a smoke-speed gate
+SCENARIO_SMOKE = {
+    "voice": dict(devices=1, scenario="voice", seed=0, duration=20.0,
+                  calib=120),
+    "video": dict(devices=1, scenario="video", seed=1, duration=4.0,
+                  calib=120),
+}
 REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet --smoke-config "
              "--json benchmarks/baselines/BENCH_fleet.json")
 SERVING_REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet "
                      "--serving-smoke-config "
                      "--json benchmarks/baselines/BENCH_fleet_serving.json")
 
+
+def scenario_baseline_path(scenario: str) -> str:
+    return os.path.join(BASELINE_DIR, f"BENCH_fleet_{scenario}.json")
+
+
+def scenario_regen_cmd(scenario: str) -> str:
+    return ("PYTHONPATH=src python -m benchmarks.bench_fleet "
+            f"--scenario-smoke-config {scenario} "
+            f"--json benchmarks/baselines/BENCH_fleet_{scenario}.json")
+
+
 ENERGY_TOL = 0.25       # relative drift allowed on fleet energy/request
 SLO_TOL = 0.15          # absolute drop allowed on fleet SLO attainment
 
 
 def gate(out: dict, baseline_path: str) -> None:
-    backend = out.get("config", {}).get("backend", "graph")
-    regen = SERVING_REGEN_CMD if backend == "serving" else REGEN_CMD
+    cfg = out.get("config", {})
+    backend = cfg.get("backend", "graph")
+    scenario = cfg.get("scenario", "mixed")
+    if backend == "serving":
+        regen = SERVING_REGEN_CMD
+    elif scenario in SCENARIO_SMOKE:
+        regen = scenario_regen_cmd(scenario)
+    else:
+        regen = REGEN_CMD
     gate_fleet(out, baseline_path, regen, ENERGY_TOL, SLO_TOL,
-               label=f"fleet[{backend}]")
+               label=f"fleet[{backend}:{scenario}]")
 
 
 def _default_serving_models():
@@ -93,6 +121,7 @@ def run(devices: int = 4, scenario: str = "mixed", seed: int = 0,
              f"slo_attainment={d.slo_attainment:.3f};"
              f"p95_ms={d.latency_s['p95']*1e3:.1f};"
              f"battery_drain_pct={d.battery_drain_pct:.5f}")
+    rails = f.get("energy_rails_j", {})
     emit(f"fleet_aggregate,,devices={f['n_devices']};requests={f['n_requests']};"
          f"energy_mJ_per_req={f['energy_per_request_j']*1e3:.3f};"
          f"slo_attainment={f['slo_attainment']:.3f};"
@@ -100,6 +129,10 @@ def run(devices: int = 4, scenario: str = "mixed", seed: int = 0,
          f"p95_ms={f['latency_s']['p95']*1e3:.1f};"
          f"p99_ms={f['latency_s']['p99']*1e3:.1f};"
          f"battery_drain_pct_mean={f['battery_drain_pct_mean']:.5f}")
+    emit(f"fleet_energy_rails,,cpu_mJ={rails.get('cpu', 0.0)*1e3:.3f};"
+         f"gpu_mJ={rails.get('gpu', 0.0)*1e3:.3f};"
+         f"bus_mJ={rails.get('bus', 0.0)*1e3:.3f};"
+         f"total_mJ={f['energy_j']*1e3:.3f}")
 
     if json_path:
         with open(json_path, "w") as fp:
@@ -132,6 +165,20 @@ def serving_smoke_run(json_path: str = None, smoke: bool = True,
                baseline_path=baseline_path, backend="serving", emit=emit)
 
 
+def scenario_smoke_run(scenario: str, json_path: str = None,
+                       smoke: bool = True, baseline_path: str = None,
+                       emit=print) -> dict:
+    """A fixed per-scenario graph-backend configuration (``voice`` /
+    ``video``) gated against ``BENCH_fleet_<scenario>.json``."""
+    cfg = SCENARIO_SMOKE[scenario]
+    if baseline_path is None:
+        baseline_path = scenario_baseline_path(scenario)
+    return run(devices=cfg["devices"], scenario=cfg["scenario"],
+               seed=cfg["seed"], duration=cfg["duration"],
+               calib=cfg["calib"], json_path=json_path, smoke=smoke,
+               baseline_path=baseline_path, emit=emit)
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--devices", type=int, default=4)
@@ -156,18 +203,28 @@ def main(argv=None) -> dict:
     ap.add_argument("--serving-smoke-config", action="store_true",
                     help="use the fixed mixed-trace serving smoke/baseline "
                          "configuration")
+    ap.add_argument("--scenario-smoke-config", default=None,
+                    choices=sorted(SCENARIO_SMOKE),
+                    help="use a fixed per-scenario smoke/baseline "
+                         "configuration (gated vs BENCH_fleet_<scenario>"
+                         ".json)")
     args = ap.parse_args(argv)
-    if args.smoke and not (args.smoke_config or args.serving_smoke_config):
+    if args.smoke and not (args.smoke_config or args.serving_smoke_config
+                           or args.scenario_smoke_config):
         # the baselines are recorded for the fixed smoke configurations only;
         # gating an arbitrary run against them would fail with a misleading
         # "no longer deterministic" request-count mismatch
         ap.error("--smoke gates against a committed baseline, which is "
                  "recorded for a fixed smoke configuration; pass "
-                 "--smoke-config or --serving-smoke-config with --smoke")
+                 "--smoke-config, --serving-smoke-config or "
+                 "--scenario-smoke-config with --smoke")
     if args.smoke_config:
         return smoke_run(json_path=args.json, smoke=args.smoke)
     if args.serving_smoke_config:
         return serving_smoke_run(json_path=args.json, smoke=args.smoke)
+    if args.scenario_smoke_config:
+        return scenario_smoke_run(args.scenario_smoke_config,
+                                  json_path=args.json, smoke=args.smoke)
     return run(devices=args.devices, scenario=args.scenario, seed=args.seed,
                duration=args.duration, calib=args.calib, json_path=args.json,
                smoke=args.smoke, backend=args.backend)

@@ -89,6 +89,11 @@ def main(argv=None) -> None:
             # the continuous engine), gated like the graph replay
             bench_fleet.serving_smoke_run(
                 json_path=jp("BENCH_fleet_serving.json"))
+            # per-scenario baselines beyond `mixed` (voice, video), each
+            # gated against its committed BENCH_fleet_<scenario>.json
+            for scenario in sorted(bench_fleet.SCENARIO_SMOKE):
+                bench_fleet.scenario_smoke_run(
+                    scenario, json_path=jp(f"BENCH_fleet_{scenario}.json"))
         else:
             bench_fleet.run(json_path=jp("BENCH_fleet.json"))
     if "kernels" in sections:

@@ -66,6 +66,12 @@ def main(argv=None):
     denials = sum(1 for d in engine.admission.log if not d["admit"])
     print(f"admission decisions: {len(engine.admission.log)} "
           f"({denials} deferred by the energy-aware policy)")
+    # per-rail attribution of the served energy, folded from the one ledger
+    # the engine, simulator and reports all share (docs/architecture.md)
+    for name, eb in sorted(engine.ledger.energy_by_model(kind="request").items()):
+        print(f"  {name:16s} energy {eb.total_j*1e3:7.2f} mJ  "
+              f"(cpu {eb.cpu_j*1e3:.2f} / gpu {eb.gpu_j*1e3:.2f} / "
+              f"bus {eb.bus_j*1e3:.2f})")
     assert len(responses) == args.requests * len(MODELS)
     return responses
 

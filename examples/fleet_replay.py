@@ -66,6 +66,10 @@ def main(argv=None):
           f"{f['latency_s']['p95']*1e3:.1f}/"
           f"{f['latency_s']['p99']*1e3:.1f} ms, "
           f"mean battery drain {f['battery_drain_pct_mean']:.4f}%")
+    rails = f["energy_rails_j"]
+    print(f"energy attribution (telemetry ledger): "
+          f"cpu {rails['cpu']*1e3:.2f} mJ / gpu {rails['gpu']*1e3:.2f} mJ / "
+          f"bus {rails['bus']*1e3:.2f} mJ of {f['energy_j']*1e3:.2f} mJ total")
     assert f["n_requests"] > 0
     return report
 

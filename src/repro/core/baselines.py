@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core.opgraph import OpGraph
 from repro.core.partitioner import PartitionPlan, dp_partition
-from repro.core.simulator import DeviceSim, DeviceState, PRESETS
+from repro.core.simulator import PRESETS, DeviceSim, DeviceState
 
 
 def mace_gpu_plan(graph: OpGraph) -> PartitionPlan:

@@ -24,6 +24,7 @@ from repro.core.opgraph import OpGraph
 from repro.core.partitioner import PartitionPlan, dp_partition, incremental_repartition
 from repro.core.profiler import RuntimeEnergyProfiler
 from repro.core.simulator import DeviceSim
+from repro.core.telemetry import EnergyBreakdown
 
 
 @dataclass
@@ -84,26 +85,38 @@ class AdaOperController:
         plan = dp_partition(graph, self._cost_fn(obs), objective=self.objective)
         self.plans[graph.name] = plan
         self.stats.setdefault(graph.name, TaskStats()).repartitions += 1
+        self.sim.ledger.count("repartitions")
         return plan
 
     def run_inference(self, graph: OpGraph) -> Tuple[float, float]:
         """One inference of `graph` under its current plan, with feedback and
         drift-triggered incremental re-partitioning."""
+        lat, en, _ = self.run_inference_rails(graph)
+        return lat, en
+
+    def run_inference_rails(self, graph: OpGraph
+                            ) -> Tuple[float, float, EnergyBreakdown]:
+        """``run_inference`` with the ground-truth energy split per rail.
+        Appends one ``infer`` StepEvent to the device ledger — the record
+        every downstream aggregate (fleet report, benchmarks) folds."""
         if graph.name not in self.plans:
             self.plan(graph)
         plan = self.plans[graph.name]
         stats = self.stats[graph.name]
         obs = self.sim.observe()
         lat = en = 0.0
+        eb = EnergyBreakdown()
         prev = plan.alphas[0]
         items, lats, ens = [], [], []
         for i, (op, a) in enumerate(zip(graph.nodes, plan.alphas)):
-            l, e = self.sim.exec_op(op, float(a), float(prev))
+            l, op_eb = self.sim.exec_op_rails(op, float(a), float(prev))
+            e = op_eb.total_j
             items.append((op, float(a), float(prev)))
             lats.append(l)
             ens.append(e)
             lat += l
             en += e
+            eb += op_eb
             prev = a
             self.sim.step(l)
         drifts = self.profiler.feedback_batch(items, obs, lats, ens)
@@ -112,6 +125,7 @@ class AdaOperController:
         stats.energies.append(en)
         if drifted:
             stats.drift_events += 1
+            self.sim.ledger.count("drift_events")
         # incremental re-partition of drifted segments (merged + halo)
         if drifted:
             obs2 = self.sim.observe()
@@ -123,11 +137,13 @@ class AdaOperController:
                     objective=self.objective,
                     lam=self._lam_estimate(new_plan))
                 stats.incremental += 1
+                self.sim.ledger.count("incremental")
             self.plans[graph.name] = new_plan
+        self.sim.ledger.emit("infer", lat, eb, model=graph.name)
         n = len(stats.latencies)
         if n % self.replan_period == 0:
             self.plan(graph)
-        return lat, en
+        return lat, en, eb
 
     def _lam_estimate(self, plan: PartitionPlan) -> float:
         return plan.pred_energy / max(plan.pred_latency, 1e-9)
@@ -175,9 +191,15 @@ class AdaOperController:
                 heapq.heappush(pending, (-prio, t_arr, k, g, meta))
                 i += 1
             _, t_arr, _, g, meta = heapq.heappop(pending)
-            lat, en = self.run_inference(g)
+            lat, en, eb = self.run_inference_rails(g)
             self.sim.drain(en)
             out.append(ArrivalRecord(t_arr, t, t + lat, t + lat - t_arr, en, meta))
+            # the per-request accounting stream the fleet report folds:
+            # latency is completion - arrival (the SLO number)
+            self.sim.ledger.emit(
+                "request", t + lat - t_arr, eb, t_s=t_arr,
+                model=getattr(meta, "model", g.name),
+                uid=getattr(meta, "uid", None), meta={"arrival": meta})
             t += lat
         return out
 

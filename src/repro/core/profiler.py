@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.gbdt import GBDTRegressor
 from repro.core.gru import GRUCorrector
 from repro.core.opgraph import OP_TYPES, STATIC_FEATURE_DIM, OpGraph, OpNode
-from repro.core.simulator import DeviceSim, DeviceState, PRESETS
+from repro.core.simulator import PRESETS, DeviceSim, DeviceState
 
 FEATURE_DIM = 6 + len(OP_TYPES) + 4
 

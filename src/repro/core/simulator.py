@@ -15,11 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
 from repro.core.opgraph import OpGraph, OpNode
+from repro.core.telemetry import EnergyBreakdown, EnergyLedger
 
 
 @dataclass(frozen=True)
@@ -94,6 +95,9 @@ class DeviceSim:
         self.battery_j = (float(battery_capacity_j)
                           if battery_capacity_j is not None else None)
         self.rng = np.random.default_rng(seed)
+        # the device's telemetry spine: the controller and serving engine
+        # append StepEvents here; fleet reports and benchmarks fold it
+        self.ledger = EnergyLedger()
         p = self.preset
         self.state = DeviceState(p["cpu_f"], p["gpu_f"], p["cpu_bg"], p["gpu_bg"])
         self._burst = 0.0
@@ -141,6 +145,10 @@ class DeviceSim:
         if dt_s <= 0.0:
             return
         self.drain(self.idle_power_w() * dt_s)
+        self.ledger.emit("idle", dt_s, EnergyBreakdown(
+            cpu_j=self.cpu_spec.p_idle_w * dt_s,
+            gpu_j=self.gpu_spec.p_idle_w * dt_s,
+            total_j=self.idle_power_w() * dt_s))
         n = min(max_steps, max(1, int(round(dt_s / 0.05))))
         for _ in range(n):
             self.step(dt_s / n, active=0.0)
@@ -202,6 +210,19 @@ class DeviceSim:
                 state: DeviceState = None) -> Tuple[float, float]:
         """Execute op with fraction ``alpha`` on GPU, ``1-alpha`` on CPU.
         Returns (latency_s, energy_j) under the (true) device state."""
+        lat, eb = self.exec_op_rails(op, alpha, prev_alpha, state)
+        return lat, eb.total_j
+
+    def exec_op_rails(self, op: OpNode, alpha: float, prev_alpha: float,
+                      state: DeviceState = None
+                      ) -> Tuple[float, EnergyBreakdown]:
+        """``exec_op`` with the energy attributed per power rail (CPU class,
+        GPU class, transfer bus). ``total_j`` is computed in the historical
+        summation order, so it is bit-identical to what ``exec_op`` always
+        returned; the rails sum to it up to float associativity (asserted in
+        ``tests/test_telemetry.py``). Pure in the device dynamics: no RNG
+        draw, no state mutation — safe to call for attribution-only
+        purposes (``rail_fractions``)."""
         s = state or self.state
         # concurrent model workers: co-runners act as extra background load on
         # both processor classes, and the CPU<->GPU staging bus is time-shared
@@ -218,21 +239,41 @@ class DeviceSim:
         move = abs(alpha - prev_alpha) * op.bytes_in + (op.comm_bytes_if_split * 0.5 if split else 0.0)
         t_bus = move / (BUS_GBPS * 1e9 / cx)
         lat = max(t_gpu, t_cpu) + t_bus + (SYNC_OVERHEAD_S if split else 0.0)
-        e = 0.0
         if alpha > 0:
-            e += t_gpu * self._power(gpu_spec, s.gpu_f, 1.0) + (lat - t_gpu) * gpu_spec.p_idle_w
+            e_gpu = t_gpu * self._power(gpu_spec, s.gpu_f, 1.0) + (lat - t_gpu) * gpu_spec.p_idle_w
         else:
-            e += lat * gpu_spec.p_idle_w
+            e_gpu = lat * gpu_spec.p_idle_w
         if alpha < 1:
-            e += t_cpu * self._power(cpu_spec, s.cpu_f, 1.0) + (lat - t_cpu) * cpu_spec.p_idle_w
+            e_cpu = t_cpu * self._power(cpu_spec, s.cpu_f, 1.0) + (lat - t_cpu) * cpu_spec.p_idle_w
         else:
-            e += lat * cpu_spec.p_idle_w
-        e += move * BUS_PJ_PER_BYTE * 1e-12
+            e_cpu = lat * cpu_spec.p_idle_w
+        e_bus = move * BUS_PJ_PER_BYTE * 1e-12
         # latent thermal effect: leakage power and throttling grow with die
         # temperature; invisible to the monitor (see __init__)
+        k = 1.0 + 0.35 * self._therm
         lat *= 1.0 + 0.20 * self._therm
-        e *= 1.0 + 0.35 * self._therm
-        return lat, e
+        # total in the pre-refactor order ((gpu + cpu) + bus) * k: bit-equal
+        # to the scalar exec_op of every previous revision
+        return lat, EnergyBreakdown(cpu_j=e_cpu * k, gpu_j=e_gpu * k,
+                                    bus_j=e_bus * k,
+                                    total_j=((0.0 + e_gpu) + e_cpu + e_bus) * k)
+
+    def rail_fractions(self, graph: OpGraph, plan,
+                       state: DeviceState = None
+                       ) -> Optional[Tuple[float, float, float]]:
+        """(cpu, gpu, bus) energy shares of executing ``graph`` under
+        ``plan``, evaluated against the current (or given) true state
+        without advancing the dynamics — the attribution key the scheduler
+        stamps on every partition plan so *predicted* energies can be split
+        per rail in the ledger."""
+        s = state or self.state
+        eb = EnergyBreakdown()
+        prev = plan[0] if len(plan) else 1.0
+        for op, a in zip(graph.nodes, plan):
+            _, e = self.exec_op_rails(op, float(a), float(prev), s)
+            eb += e
+            prev = a
+        return eb.fractions()
 
     def exec_graph(self, graph: OpGraph, plan, state: DeviceState = None,
                    advance: bool = False) -> Tuple[float, float]:

@@ -107,41 +107,69 @@ class DeviceReplay:
 
     def run(self, trace: Trace) -> Tuple[List[RequestRecord], Dict[str, int]]:
         b0 = self.sim.battery_pct
+        # the ledger is cumulative over the device's life; fold only this
+        # run's window so back-to-back runs stay independent
+        mark = len(self.sim.ledger.events)
+        self._counters0 = dict(self.sim.ledger.counters)
         if self.backend == "graph":
-            records, counters = self._run_graph(trace)
+            counters = self._run_graph(trace)
         else:
-            records, counters = self._run_serving(trace)
+            counters = self._run_serving(trace)
         self.battery_start_pct, self.battery_end_pct = b0, self.sim.battery_pct
-        return records, counters
+        # every number in the report folds out of the device's ledger: the
+        # run_* drivers only emit events + counters, this derives the records
+        return self._records_from_ledger(trace, mark), counters
 
     def metrics(self, records, counters) -> DeviceMetrics:
         return DeviceMetrics.from_records(
             self.profile.name, self.profile.tier, records,
             self.battery_start_pct, self.battery_end_pct, counters)
 
+    def _records_from_ledger(self, trace: Trace,
+                             mark: int = 0) -> List[RequestRecord]:
+        """Join the ledger's per-request events (one per served arrival,
+        appended at completion by the controller / engine, starting at
+        event index ``mark``) with the trace for SLO and priority context.
+        Sorted by uid for a stable order."""
+        by_uid = {r.uid: r for r in trace}
+        records = []
+        for ev in self.sim.ledger.events[mark:]:
+            if ev.kind != "request":
+                continue
+            tr = by_uid[ev.uid]
+            records.append(RequestRecord(
+                uid=tr.uid, model=tr.model, priority=tr.priority,
+                t_arrival_s=tr.t_arrival_s,
+                t_done_s=tr.t_arrival_s + ev.latency_s,
+                latency_s=ev.latency_s, energy_j=ev.energy.total_j,
+                slo_s=tr.slo_s, slo_met=ev.latency_s <= tr.slo_s,
+                energy_cpu_j=ev.energy.cpu_j, energy_gpu_j=ev.energy.gpu_j,
+                energy_bus_j=ev.energy.bus_j))
+        records.sort(key=lambda rec: rec.uid)
+        return records
+
     # ------------------------------------------------------------------
-    def _run_graph(self, trace: Trace):
+    def _run_graph(self, trace: Trace) -> Dict[str, int]:
         _require_models(trace, self.graphs, "graph")
         # resident concurrent tasks contend like run_concurrent's setting
         prev = self.sim.coexec
         self.sim.set_coexec(max(1, len({r.model for r in trace})))
         try:
-            recs = self.controller.run_trace(
+            self.controller.run_trace(
                 [(r.t_arrival_s, self.graphs[r.model], r) for r in trace])
         finally:
             self.sim.set_coexec(prev)
-        records = [RequestRecord(
-            uid=rec.meta.uid, model=rec.meta.model,
-            priority=rec.meta.priority, t_arrival_s=rec.t_arrival,
-            t_done_s=rec.t_done, latency_s=rec.latency_s,
-            energy_j=rec.energy_j, slo_s=rec.meta.slo_s,
-            slo_met=rec.latency_s <= rec.meta.slo_s) for rec in recs]
-        counters = {"repartitions": 0, "incremental": 0, "drift_events": 0}
-        for st in self.controller.stats.values():
-            counters["repartitions"] += st.repartitions
-            counters["incremental"] += st.incremental
-            counters["drift_events"] += st.drift_events
-        return records, counters
+        c = self._ledger_counter_delta()
+        return {"repartitions": c.get("repartitions", 0),
+                "incremental": c.get("incremental", 0),
+                "drift_events": c.get("drift_events", 0)}
+
+    def _ledger_counter_delta(self) -> Dict[str, int]:
+        """This run's raw ledger counters (cumulative minus the snapshot
+        taken at the start of ``run``)."""
+        base = getattr(self, "_counters0", {})
+        return {k: v - base.get(k, 0)
+                for k, v in self.sim.ledger.counters.items()}
 
     def _llm_request(self, trace: Trace, r):
         """Deterministic synthetic prompt for one LLM trace request."""
@@ -152,40 +180,30 @@ class DeviceReplay:
         prompt = rng.integers(1, vocab, max(r.prompt_len, 1), dtype=np.int32)
         return Request(r.uid, prompt, max_new_tokens=max(r.max_new_tokens, 1))
 
-    def _response_record(self, trace_req, resp) -> RequestRecord:
-        return RequestRecord(
-            uid=trace_req.uid, model=trace_req.model,
-            priority=trace_req.priority, t_arrival_s=trace_req.t_arrival_s,
-            t_done_s=trace_req.t_arrival_s + resp.latency_s,
-            latency_s=resp.latency_s, energy_j=resp.energy_j_pred,
-            slo_s=trace_req.slo_s, slo_met=resp.latency_s <= trace_req.slo_s)
+    def _serving_counters(self) -> Dict[str, int]:
+        """Fleet counter schema from the shared ledger. The engine counts
+        its drift events under ``engine_drift_events`` (the controller owns
+        the plain ``drift_events`` name on the same ledger); ``rejected``
+        (error-Response) requests were never served: they are surfaced as a
+        counter, not as records — a NaN energy must not poison the fleet
+        aggregates or count toward SLO attainment."""
+        c = self._ledger_counter_delta()
+        return {"drift_events": c.get("engine_drift_events", 0),
+                "preemptions": c.get("preemptions", 0),
+                "admission_denials": c.get("admission_denials", 0),
+                "rejected": c.get("rejected", 0)}
 
-    def _serving_counters(self, responses) -> Dict[str, int]:
-        return {
-            "drift_events": self.engine.drift_events,
-            "preemptions": sum(self.engine.preemptions.values()),
-            "admission_denials": sum(
-                1 for d in self.engine.admission.log if not d["admit"]),
-            # rejected (error-Response) requests were never served: they are
-            # surfaced as a counter, not as records — a NaN energy must not
-            # poison the fleet aggregates or count toward SLO attainment
-            "rejected": sum(1 for r in responses if r.error is not None),
-        }
-
-    def _run_serving(self, trace: Trace):
+    def _run_serving(self, trace: Trace) -> Dict[str, int]:
         known = set(self.engine.workers) | set(self.graphs)
         _require_models(trace, known, "serving")
         if any(r.model not in self.engine.workers for r in trace):
             return self._run_serving_mixed(trace)
-        by_uid = {r.uid: r for r in trace}
         arrivals = [(r.t_arrival_s, r.model, self._llm_request(trace, r))
                     for r in trace]
-        responses = self.engine.run_trace(arrivals)
-        records = [self._response_record(by_uid[resp.uid], resp)
-                   for resp in responses if resp.error is None]
-        return records, self._serving_counters(responses)
+        self.engine.run_trace(arrivals)
+        return self._serving_counters()
 
-    def _run_serving_mixed(self, trace: Trace):
+    def _run_serving_mixed(self, trace: Trace) -> Dict[str, int]:
         """Mixed vision+LLM trace on one merged virtual timeline: LLM
         requests stream through the continuous engine, vision/AR frames run
         as one operator-graph inference each through the controller —
@@ -197,7 +215,6 @@ class DeviceReplay:
         items = list(trace)  # time-sorted, uids in arrival order
         by_uid = {r.uid: r for r in trace}
         n_resident = len({r.model for r in trace})
-        records: List[RequestRecord] = []
         responses: List = []
         frames: List[Tuple] = []  # (-priority, t_arrival, uid) heap
         t = 0.0
@@ -228,33 +245,27 @@ class DeviceReplay:
                     _, t_arr, uid = heapq.heappop(frames)
                     r = by_uid[uid]
                     sim.set_coexec(n_resident)
-                    lat, en = self.controller.run_inference(self.graphs[r.model])
+                    lat, en, eb = self.controller.run_inference_rails(
+                        self.graphs[r.model])
                     sim.drain(en)
                     t += lat
                     eng._vtime = t
-                    records.append(RequestRecord(
-                        uid=uid, model=r.model, priority=r.priority,
-                        t_arrival_s=t_arr, t_done_s=t, latency_s=t - t_arr,
-                        energy_j=en, slo_s=r.slo_s,
-                        slo_met=(t - t_arr) <= r.slo_s))
+                    # the frame's per-request event (the engine appends its
+                    # own at retirement) — latency is completion - arrival
+                    sim.ledger.emit("request", t - t_arr, eb, t_s=t_arr,
+                                    model=r.model, uid=uid)
                     busy = [m for m in eng.workers if eng._busy(m)]
                 if busy:
                     eng._serve_round(busy, responses)
                     t = eng._vtime
         finally:
             eng._vtime = None
-        records.extend(self._response_record(by_uid[resp.uid], resp)
-                       for resp in responses if resp.error is None)
-        records.sort(key=lambda rec: rec.uid)
-        counters = self._serving_counters(responses)
-        for st in self.controller.stats.values():
-            counters["repartitions"] = (counters.get("repartitions", 0)
-                                        + st.repartitions)
-            counters["incremental"] = (counters.get("incremental", 0)
-                                       + st.incremental)
-            counters["graph_drift_events"] = (
-                counters.get("graph_drift_events", 0) + st.drift_events)
-        return records, counters
+        counters = self._serving_counters()
+        c = self._ledger_counter_delta()
+        counters["repartitions"] = c.get("repartitions", 0)
+        counters["incremental"] = c.get("incremental", 0)
+        counters["graph_drift_events"] = c.get("drift_events", 0)
+        return counters
 
 
 class FleetReplay:

@@ -1,10 +1,13 @@
 """Fleet-replay metric aggregation.
 
 Per-device and fleet-level rollups of the replay records: energy per
-request, battery drain, SLO attainment and latency percentiles
-(p50/p95/p99, linear interpolation — the math is hand-verified in
-``tests/test_fleet.py``). Serializes to/from the ``BENCH_fleet.json``
-schema gated by ``benchmarks/run.py --smoke``.
+request (split per cpu/gpu/bus rail), battery drain, SLO attainment and
+latency percentiles (p50/p95/p99, linear interpolation — the math is
+hand-verified in ``tests/test_fleet.py``). The records themselves are
+derived from the device's :class:`~repro.core.telemetry.EnergyLedger`
+(``repro.fleet.replay``), so every number here traces to one event stream.
+Serializes to/from the ``BENCH_fleet*.json`` schema gated by
+``benchmarks/run.py --smoke``.
 """
 from __future__ import annotations
 
@@ -27,7 +30,10 @@ def latency_percentiles(latencies: Sequence[float]) -> Dict[str, float]:
 
 @dataclass
 class RequestRecord:
-    """One replayed request, in simulated seconds."""
+    """One replayed request, in simulated seconds. The per-rail energy
+    fields carry the ledger's attribution (ground-truth physics on the
+    graph path, plan-derived fractions on the serving path); ``energy_j``
+    remains the authoritative total."""
     uid: int
     model: str
     priority: int
@@ -37,6 +43,9 @@ class RequestRecord:
     energy_j: float
     slo_s: float
     slo_met: bool
+    energy_cpu_j: float = 0.0
+    energy_gpu_j: float = 0.0
+    energy_bus_j: float = 0.0
 
 
 @dataclass
@@ -52,6 +61,9 @@ class DeviceMetrics:
     slo_attainment: float
     latency_s: Dict[str, float]  # p50/p95/p99
     counters: Dict[str, int] = field(default_factory=dict)
+    # per-processor attribution of energy_j (cpu/gpu/bus), folded from the
+    # same ledger-derived records as the total
+    energy_rails_j: Dict[str, float] = field(default_factory=dict)
 
     @classmethod
     def from_records(cls, device: str, tier: str,
@@ -70,6 +82,10 @@ class DeviceMetrics:
             slo_attainment=met / n if n else 1.0,
             latency_s=latency_percentiles([r.latency_s for r in records]),
             counters=dict(counters or {}),
+            energy_rails_j={
+                "cpu": float(sum(r.energy_cpu_j for r in records)),
+                "gpu": float(sum(r.energy_gpu_j for r in records)),
+                "bus": float(sum(r.energy_bus_j for r in records))},
         )
 
 
@@ -100,11 +116,16 @@ class FleetReport:
         tiers: Dict[str, int] = {}
         for d in devices:
             tiers[d.tier] = tiers.get(d.tier, 0) + 1
+        rails: Dict[str, float] = {"cpu": 0.0, "gpu": 0.0, "bus": 0.0}
+        for d in devices:
+            for k, v in (d.energy_rails_j or {}).items():
+                rails[k] = rails.get(k, 0.0) + v
         fleet = {
             "n_devices": len(devices),
             "tier_counts": tiers,
             "n_requests": n,
             "energy_j": energy,
+            "energy_rails_j": rails,
             "energy_per_request_j": energy / n if n else 0.0,
             "battery_drain_pct_mean": (
                 float(np.mean([d.battery_drain_pct for d in devices]))

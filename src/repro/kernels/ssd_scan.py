@@ -61,7 +61,19 @@ def _ssd_kernel(x_ref, da_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref, state_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dA, dt, Bm, Cm, *, chunk=128, interpret=None):
+def ssd_scan(x, dA, dt, Bm, Cm, *, mask=None, chunk=128, interpret=None):
+    """``mask`` (B,S) bool/float — True at valid positions — makes bucketed
+    prompt padding pad-token-safe: masked positions have ``dt``/``dA``/input
+    zeroed before the scan, so they neither write into nor decay the carried
+    state (decay ``exp(0) = 1``) and the final state equals the scan over
+    the valid positions alone. The per-chunk tail padding below already uses
+    the same identity (``jnp.pad`` zeros)."""
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        x = x * m[:, :, None, None].astype(x.dtype)
+        dA = dA * m[:, :, None].astype(dA.dtype)
+        dt = dt * m[:, :, None].astype(dt.dtype)
+        Bm = Bm * m[:, :, None].astype(Bm.dtype)
     B, S, H, P = x.shape
     N = Bm.shape[-1]
     if interpret is None:

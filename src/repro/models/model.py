@@ -102,15 +102,23 @@ def write_cache_slots(pool_cache, group_cache, slots):
         pool_cache, group_cache)
 
 
-def prefill(params, cfg, inputs, cache, ctx=ExecContext(), enc_inputs=None):
+def prefill(params, cfg, inputs, cache, ctx=ExecContext(), enc_inputs=None,
+            pad_mask=None):
     """Run the prompt through the model, writing mixer state into ``cache``.
-    Returns (logits at every position, cache)."""
+    Returns (logits at every position, cache).
+
+    ``pad_mask`` (B, S) bool — True at valid positions — makes bucketed
+    (LEFT-padded) prompts safe for SSM mixers: masked positions neither
+    update nor decay the scan state, so the state and last-position logits
+    match an exact-length prefill. Supported for pure-SSM stacks only
+    (attention layers raise: their rotary positions would shift)."""
     enc_out = None
     if cfg.is_encoder_decoder:
         enc_out = encode(params, cfg, enc_inputs, ctx)
     x = _embed_inputs(params, cfg, inputs)
     x, _, cache = tfm.apply_stack(params["stages"], cfg, x, ctx, mode="prefill",
-                                  cache=cache, enc_out=enc_out)
+                                  cache=cache, enc_out=enc_out,
+                                  ssm_mask=pad_mask)
     x = apply_norm(params["final_norm"], x, cfg)
     return lm_logits(params["embed"], x, cfg), cache
 

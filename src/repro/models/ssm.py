@@ -113,15 +113,28 @@ def ssd_chunked(x, dA, dt, Bm, Cm, chunk):
     return y.astype(x.dtype), h_last
 
 
-def mamba2_forward(p, xin, cfg):
-    """xin (B,S,D) -> (y (B,S,D), (conv_state, ssm_state))."""
+def mamba2_forward(p, xin, cfg, mask=None):
+    """xin (B,S,D) -> (y (B,S,D), (conv_state, ssm_state)).
+
+    ``mask`` (B,S) bool — True at valid positions — makes LEFT-padded
+    (bucketed) prompts pad-token-safe: the conv input is zeroed at masked
+    positions (matching the causal conv's implicit zero history) and ``dt``
+    is zeroed so pad steps neither write into nor decay the SSM state
+    (``dA = dt*A = 0`` => decay ``exp(0) = 1``, input scale 0). With left
+    padding the scan state entering the first real token is exactly the
+    zero init, so the final state and last-position output are bit-equal to
+    the unpadded prefill (``tests/test_ssm_padding.py``)."""
     B, S, _ = xin.shape
     di, N, H, P = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_num_heads, cfg.ssm_head_dim
     zxbcdt = xin @ p["in_proj"]
     z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    if mask is not None:
+        xBC = xBC * mask.astype(xBC.dtype)[..., None]
     xBC_conv = jax.nn.silu(_causal_conv(xBC, p["conv_w"].astype(jnp.float32), p["conv_b"]).astype(xin.dtype))
     xs, Bm, Cm = jnp.split(xBC_conv, [di, di + N], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    if mask is not None:
+        dt = dt * mask.astype(dt.dtype)[..., None]
     A = -jnp.exp(p["A_log"])  # (H,)
     y, h_last = ssd_chunked(xs.reshape(B, S, H, P), dt * A, dt, Bm, Cm, cfg.ssm_chunk)
     y = y + p["D"][None, None, :, None] * xs.reshape(B, S, H, P).astype(jnp.float32)
@@ -228,12 +241,17 @@ def _selective_scan_chunked(u, dt, Bm, Cm, A, chunk):
     return y, h_last
 
 
-def mamba1_forward(p, xin, cfg):
+def mamba1_forward(p, xin, cfg, mask=None):
+    """``mask`` (B,S): pad-token-safe scan for LEFT-padded prompts — same
+    contract as :func:`mamba2_forward` (zeroed conv input + zeroed ``dt``
+    make masked positions pass the state through untouched)."""
     B, S, _ = xin.shape
     di, N = cfg.d_inner, cfg.ssm_d_state
     rank = _dt_rank(cfg)
     xz = xin @ p["in_proj"]
     x, z = jnp.split(xz, 2, axis=-1)
+    if mask is not None:
+        x = x * mask.astype(x.dtype)[..., None]
     x_conv = jax.nn.silu(_causal_conv(x, p["conv_w"].astype(jnp.float32), p["conv_b"]).astype(xin.dtype))
     dbc = x_conv @ p["x_proj"]
     dt_r, Bm, Cm = jnp.split(dbc, [rank, rank + N], axis=-1)
@@ -241,6 +259,8 @@ def mamba1_forward(p, xin, cfg):
     Bm = rms_norm_head(Bm, p["b_norm"])
     Cm = rms_norm_head(Cm, p["c_norm"])
     dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_proj_b"])  # (B,S,di)
+    if mask is not None:
+        dt = dt * mask.astype(dt.dtype)[..., None]
     A = -jnp.exp(p["A_log"])  # (di,N)
     y, h_last = _selective_scan_chunked(x_conv, dt, Bm, Cm, A, cfg.ssm_chunk)
     y = y + p["D"] * x_conv.astype(jnp.float32)

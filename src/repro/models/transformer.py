@@ -20,9 +20,7 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention as att
-from repro.models import moe as moe_mod
-from repro.models import ssm
+from repro.models import attention as att, moe as moe_mod, ssm
 from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm, split
 
 ATTN_KINDS = ("attn", "local", "global")
@@ -113,14 +111,20 @@ def _window(cfg, kind):
 
 
 def apply_layer(lp, x, cfg, kind, mlp_kind, ctx, mode, cache, pos,
-                enc_out=None, causal=True, enc_len=None):
-    """Returns (x, aux, new_cache)."""
+                enc_out=None, causal=True, enc_len=None, ssm_mask=None):
+    """Returns (x, aux, new_cache). ``ssm_mask`` (B, S) marks valid prompt
+    positions for pad-bucketed SSM prefill; attention mixers reject it
+    (their positions are absolute, so left padding would shift rope)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = dict(cache) if cache is not None else None
     h = apply_norm(lp["pre_norm"], x, cfg)
 
     # ---- mixer ----
     if kind in ATTN_KINDS:
+        if ssm_mask is not None:
+            raise ValueError(
+                "pad_mask/ssm_mask is only supported for pure-SSM stacks; "
+                f"layer kind {kind!r} attends over absolute positions")
         if mode == "decode":
             if cfg.use_mla:
                 mix, (ck, kr) = att.mla_decode(lp["attn"], h, cfg, cache["c_kv"],
@@ -161,7 +165,7 @@ def apply_layer(lp, x, cfg, kind, mlp_kind, ctx, mode, cache, pos,
             mix, (conv_s, ssm_s) = step(lp["mixer"], h, cfg, cache["conv"], cache["ssm"])
             new_cache.update(conv=conv_s, ssm=ssm_s)
         else:
-            mix, (conv_s, ssm_s) = fwd(lp["mixer"], h, cfg)
+            mix, (conv_s, ssm_s) = fwd(lp["mixer"], h, cfg, mask=ssm_mask)
             if mode == "prefill":
                 new_cache.update(conv=conv_s.astype(cache["conv"].dtype), ssm=ssm_s)
     else:
@@ -241,7 +245,7 @@ def init_stack_cache(cfg, batch, max_len, dtype, decoder_cross=False, enc_len=0)
 
 
 def apply_stack(stage_params, cfg, x, ctx, mode, cache=None, pos=0,
-                enc_out=None, cross=False, enc_len=None):
+                enc_out=None, cross=False, enc_len=None, ssm_mask=None):
     stages = compute_stages(cfg, cross=cross)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -257,7 +261,8 @@ def apply_stack(stage_params, cfg, x, ctx, mode, cache=None, pos=0,
                 xc, a, cj = apply_layer(
                     lp[f"l{j}"], xc, cfg, kind, mlp, ctx, mode,
                     cin[f"l{j}"] if cin is not None else None, pos,
-                    enc_out=enc_out, causal=not cross, enc_len=enc_len)
+                    enc_out=enc_out, causal=not cross, enc_len=enc_len,
+                    ssm_mask=ssm_mask)
                 aux = aux + a
                 cout[f"l{j}"] = cj
             return (xc, aux), (cout if sc is not None else None)

@@ -1,447 +1,46 @@
 """Concurrent serving engine with AdaOper energy-aware scheduling.
 
-The paper's setting is several DNN tasks sharing one device. Here several
-models share the engine: each model gets a ``ModelWorker`` (jitted prefill +
-decode against a preallocated KV/state cache); the ``AdaOperScheduler``
-consults the runtime energy profiler + DP partitioner to pick, per batch,
-(a) the operator partition plan (maps to sharding overrides at pod scale,
-and to the device-simulator plan in the paper experiments) and (b) the
-microbatch size that minimises predicted energy-delay product.
+The paper's setting is several DNN tasks sharing one device; here several
+models share the engine. This module is the *orchestrator* of the
+``repro.serving`` package — the machinery lives in focused submodules
+(``slots``, ``sampling``, ``workers``, ``admission``, ``scheduler``,
+``bucketed``, ``planning``; see ``docs/architecture.md``) and is
+re-exported here so pre-refactor import paths
+(``from repro.serving.engine import ...``) keep working
+(``tests/test_serving_imports.py``).
 
-Two serving modes (see docs/serving.md):
-
-  * ``continuous`` (default) — Orca-style iteration-level scheduling: a
-    per-step admission loop joins/retires requests at token granularity
-    against a preallocated slot-pool cache (``SlotAllocator`` rows + ragged
-    per-slot decode positions), with an energy-aware ``AdmissionPolicy``
-    that consults the cached profiler/partitioner fast path each step, and
-    drift-triggered preemption of the lowest-priority model worker.
-  * ``bucketed`` — the position-synchronous reference implementation
-    (requests grouped into equal-prompt-length buckets), kept behind the
-    flag the way ``vectorize=False`` keeps the scalar DP.
+Two serving modes (docs/serving.md): ``continuous`` (default, Orca-style
+iteration-level scheduling) and ``bucketed`` (the position-synchronous
+reference, kept the way ``vectorize=False`` keeps the scalar DP). Every
+energy number the engine produces is appended to the device's
+:class:`~repro.core.telemetry.EnergyLedger` (``prefill``/``decode`` events
+per iteration, one ``request`` event per retirement, split per rail by the
+plan's physics fractions) — reports fold the ledger, never engine-private
+tallies.
 """
 from __future__ import annotations
 
 import time
-import zlib
-from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.opgraph import build_transformer_graph
-from repro.core.partitioner import dp_partition
-from repro.core.profiler import state_bucket
-from repro.models import model as model_lib
+from repro.core.telemetry import EnergyBreakdown, EnergyLedger
+from repro.serving import admission as adm, planning, sampling
+from repro.serving.admission import AdmissionPolicy  # noqa: F401  (re-export)
+from repro.serving.bucketed import step_bucketed
+from repro.serving.sampling import _sample_rows  # noqa: F401  (re-export)
+from repro.serving.scheduler import AdaOperScheduler, combine_rails  # noqa: F401
+from repro.serving.slots import (  # noqa: F401  (re-export)
+    Request,
+    Response,
+    SlotAllocator,
+    _ActiveSeq,
+    _SlotPool,
+)
+from repro.serving.workers import ModelWorker
 from repro.sharding.context import ExecContext
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 16
-    enc_inputs: Optional[np.ndarray] = None
-    t_submit: float = 0.0  # stamped by ServingEngine.submit
-
-
-@dataclass
-class Response:
-    uid: int
-    tokens: np.ndarray
-    latency_s: float
-    energy_j_pred: float
-    # set when the request was rejected instead of served (e.g. oversized
-    # prompt): the serving loop keeps draining, it never crashes mid-_admit
-    error: Optional[str] = None
-
-
-def _sample_rows(keys, idx, logits):
-    """One batched draw: token ``idx[b]`` of stream ``keys[b]`` from the
-    (already temperature-scaled) ``logits[b]``. The vmapped fold_in +
-    categorical is bit-identical to the scalar per-slot draws
-    (``tests/test_continuous_serving.py::test_vmapped_sampling_matches_scalar``),
-    so batching the per-slot loop preserves every seed⊕model⊕uid⊕token-index
-    stream exactly."""
-    def draw(k, i, row):
-        return jax.random.categorical(jax.random.fold_in(k, i), row)
-    return jax.vmap(draw)(keys, idx, logits)
-
-
-class SlotAllocator:
-    """Fixed pool of cache rows for continuous batching. O(1) alloc/free,
-    LIFO reuse so the most-recently-retired row (hottest in cache) is handed
-    out first. Double-free and foreign-slot frees raise."""
-
-    def __init__(self, n_slots: int):
-        if n_slots <= 0:
-            raise ValueError(f"n_slots must be positive, got {n_slots}")
-        self.n_slots = n_slots
-        self._free = list(range(n_slots - 1, -1, -1))
-        self._in_use: set = set()
-
-    @property
-    def n_free(self) -> int:
-        return len(self._free)
-
-    @property
-    def n_active(self) -> int:
-        return len(self._in_use)
-
-    def alloc(self) -> Optional[int]:
-        """Returns a free slot index, or None when the pool is full."""
-        if not self._free:
-            return None
-        slot = self._free.pop()
-        self._in_use.add(slot)
-        return slot
-
-    def free(self, slot: int) -> None:
-        if slot not in self._in_use:
-            raise ValueError(f"slot {slot} is not allocated")
-        self._in_use.remove(slot)
-        self._free.append(slot)
-
-
-class ModelWorker:
-    def __init__(self, name: str, cfg, params, max_len: int = 512,
-                 ctx: ExecContext = ExecContext(),
-                 max_enc_len: Optional[int] = None):
-        self.name = name
-        self.cfg = cfg
-        self.params = params
-        self.max_len = max_len
-        self.ctx = ctx
-        # enc-dec slot pools preallocate the cross-attention cache region at
-        # this length; decoder-only models carry no encoder region
-        self.max_enc_len = (max_enc_len if max_enc_len is not None
-                            else (max_len if cfg.is_encoder_decoder else 0))
-        self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
-        self._write = jax.jit(model_lib.write_cache_slot, donate_argnums=(0,))
-        self._write_many = jax.jit(model_lib.write_cache_slots,
-                                   donate_argnums=(0,))
-
-    def _prefill_impl(self, params, cache, tokens, enc_inputs=None):
-        logits, cache = model_lib.prefill(params, self.cfg, tokens, cache, self.ctx,
-                                          enc_inputs=enc_inputs)
-        return logits[:, -1], cache
-
-    def _decode_impl(self, params, cache, token, pos, enc_len=None):
-        logits, cache = model_lib.decode_step(params, self.cfg, token, cache,
-                                              pos, self.ctx, enc_len=enc_len)
-        return logits[:, -1], cache
-
-    def generate(self, prompts: np.ndarray, max_new: int,
-                 enc_inputs=None, temperature: float = 0.0, seed: int = 0,
-                 row_keys=None):
-        """prompts (B, S) equal-length. Greedy (T=0) or sampled decode.
-
-        ``row_keys`` (B, 2) uint32: per-request sampling streams — token i of
-        row b draws from ``fold_in(row_keys[b], i)``, matching the continuous
-        engine's seed⊕model⊕uid⊕token-index streams so both serving modes
-        emit identical sampled tokens. ``None`` keeps the legacy split-chain
-        RNG (shared across rows) seeded by ``seed``."""
-        B, S = prompts.shape
-        enc_len = enc_inputs.shape[1] if enc_inputs is not None else 0
-        cache = model_lib.init_cache(self.cfg, B, self.max_len, enc_len=enc_len)
-        args = (self.params, cache, jnp.asarray(prompts))
-        if self.cfg.is_encoder_decoder:
-            logits, cache = self._prefill(*args, jnp.asarray(enc_inputs))
-        else:
-            logits, cache = self._prefill(*args)
-        out = np.zeros((B, max_new), np.int32)
-        rng = jax.random.PRNGKey(seed)
-        tok = self._pick(logits, temperature, rng, row_keys, 0)
-        for i in range(max_new):
-            out[:, i] = np.asarray(tok)[:, 0]
-            if i == max_new - 1:
-                break
-            logits, cache = self._decode(self.params, cache, tok, jnp.int32(S + i))
-            rng, k = jax.random.split(rng)
-            tok = self._pick(logits, temperature, k, row_keys, i + 1)
-        return out
-
-    @staticmethod
-    def _pick(logits, temperature, rng, row_keys=None, token_idx=0):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        if row_keys is not None:
-            idx = jnp.full((row_keys.shape[0],), token_idx, jnp.uint32)
-            return _sample_rows(row_keys, idx,
-                                logits / temperature)[:, None].astype(jnp.int32)
-        return jax.random.categorical(rng, logits / temperature)[:, None].astype(jnp.int32)
-
-    # ---- continuous-batching primitives (slot-pool cache) ----
-
-    def init_pool(self, max_slots: int):
-        """Preallocated KV/state cache with one row per request slot (plus a
-        ``max_enc_len`` encoder cross-attention region for enc-dec models)."""
-        return model_lib.init_cache(self.cfg, max_slots, self.max_len,
-                                    enc_len=self.max_enc_len)
-
-    def prefill_one(self, prompt: np.ndarray, enc_inputs=None):
-        """Prefill a single request at its exact length. Returns
-        (last-position logits (1,V), batch-1 cache to scatter into a slot)."""
-        return self.prefill_batch(
-            prompt[None], None if enc_inputs is None else enc_inputs[None])
-
-    def prefill_batch(self, prompts: np.ndarray, enc_inputs=None):
-        """Batched admission prefill: ``prompts`` (G, S) equal-length (the
-        caller pads G to a pow2 bucket). Returns (last-position logits (G,V),
-        batch-G cache whose rows scatter into slots via ``write_slots``).
-        Every op is row-independent, so each row is bit-identical to a
-        ``prefill_one`` of the same prompt."""
-        G = prompts.shape[0]
-        cache = model_lib.init_cache(self.cfg, G, self.max_len,
-                                     enc_len=self.max_enc_len)
-        args = (self.params, cache, jnp.asarray(prompts))
-        if self.cfg.is_encoder_decoder:
-            return self._prefill(*args, jnp.asarray(enc_inputs))
-        return self._prefill(*args)
-
-    def write_slot(self, pool_cache, one_cache, slot: int):
-        return self._write(pool_cache, one_cache, slot)
-
-    def write_slots(self, pool_cache, group_cache, slots: np.ndarray):
-        """Scatter a batched prefill cache into the rows named by ``slots``;
-        out-of-range entries (pow2 batch padding) are dropped."""
-        return self._write_many(pool_cache, group_cache,
-                                jnp.asarray(slots, dtype=jnp.int32))
-
-    def decode_pool(self, pool_cache, tokens: np.ndarray, pos: np.ndarray,
-                    enc_len=None):
-        """One ragged decode step over the whole slot pool. ``tokens``
-        (max_slots,1) int32, ``pos`` (max_slots,) int32 per-slot write
-        positions, ``enc_len`` (max_slots,) per-slot encoder lengths for
-        enc-dec models (masks each row's cross-attention to its own encoder
-        region). Reuses the jitted decode body — a (B,) position vector
-        traces the ragged path in the model. Returns (greedy next tokens
-        (max_slots,) np.int32, logits (max_slots, V) for per-slot sampling,
-        cache)."""
-        logits, pool_cache = self._decode(
-            self.params, pool_cache, jnp.asarray(tokens),
-            jnp.asarray(pos, dtype=jnp.int32),
-            None if enc_len is None else jnp.asarray(enc_len, dtype=jnp.int32))
-        return (np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)),
-                logits, pool_cache)
-
-
-class AdaOperScheduler:
-    """Energy-aware batch planner: for each candidate microbatch size,
-    predict (latency, energy) of prefill+decode opgraphs with the profiler
-    under the observed device state, DP-partition each, and pick the EDP
-    minimiser. Returns the plan so the runtime can apply it.
-
-    Fast path: graphs are built once per (cfg, batch, length-bucket, kind)
-    and plans are memoised in an LRU keyed additionally by the quantized
-    device-state bucket and the profiler's correction version — so a warm
-    cache answers a schedule decision with zero cost-model evaluations,
-    and any drift feedback (version bump) or state move invalidates it.
-    """
-
-    def __init__(self, profiler, sim, objective: str = "edp",
-                 candidate_batches=(1, 2, 4, 8), plan_cache_size: int = 256,
-                 graph_cache_size: int = 64):
-        self.profiler = profiler
-        self.sim = sim
-        self.objective = objective
-        self.candidates = candidate_batches
-        self.plan_cache_size = plan_cache_size
-        self.graph_cache_size = graph_cache_size
-        self._graph_cache: OrderedDict = OrderedDict()
-        self._plan_cache: OrderedDict = OrderedDict()
-        self.plan_cache_hits = 0
-        self.plan_cache_misses = 0
-
-    @staticmethod
-    def _len_bucket(n: int) -> int:
-        """Next power of two (min 16): nearby prompt lengths share graphs,
-        cost tables and cached plans."""
-        return max(16, 1 << (max(int(n), 1) - 1).bit_length())
-
-    @staticmethod
-    def _new_bucket(n: int) -> int:
-        """Next power of two (min 1) for decode-length horizons: the
-        continuous engine's remaining-token envelope shrinks every step and
-        must not generate a fresh plan-cache key each time."""
-        return 1 << (max(int(n), 1) - 1).bit_length()
-
-    def invalidate(self):
-        """Drop all memoised plans and graphs (drift-forced replan)."""
-        self._plan_cache.clear()
-        self._graph_cache.clear()
-
-    def _graph(self, cfg, batch: int, seq: int, kind: str):
-        key = (cfg.name, batch, seq, kind)
-        g = self._graph_cache.get(key)
-        if g is None:
-            g = self._graph_cache[key] = build_transformer_graph(cfg, batch, seq, kind=kind)
-        else:
-            self._graph_cache.move_to_end(key)
-        # LRU-bounded: varied (batch, seq) combinations must not leak graphs
-        # (each ~100 OpNodes with cached feature blocks) without limit
-        while len(self._graph_cache) > self.graph_cache_size:
-            self._graph_cache.popitem(last=False)
-        return g
-
-    def _candidates_for(self, n_waiting: int) -> List[int]:
-        n = max(n_waiting, 1)
-        cands = {c for c in self.candidates if c <= n}
-        # exact-fit candidate: 3 waiting with candidates (1,2,4) must be able
-        # to serve all 3 in one batch, not just 2
-        cands.add(min(n, max(self.candidates)))
-        return sorted(cands)
-
-    def _plan_one(self, cfg, b: int, seq: int, kind: str, cost_fn, cache_key):
-        """One cached DP solve for a (batch, seq, kind) graph. Prefill and
-        decode entries are cached independently so the continuous engine's
-        per-step decode refresh after a drift event never re-solves the
-        prefill graph (and decode entries are shared across every
-        (prompt-bucket, horizon-bucket) pair summing to the same length)."""
-        key = (cfg.name, b, seq, kind) + cache_key
-        ent = self._plan_cache.get(key)
-        if ent is not None:
-            self.plan_cache_hits += 1
-            self._plan_cache.move_to_end(key)
-            return ent
-        self.plan_cache_misses += 1
-        g = self._graph(cfg, b, seq, kind)
-        ent = dp_partition(g, cost_fn, objective=self.objective)
-        self._plan_cache[key] = ent
-        while len(self._plan_cache) > self.plan_cache_size:
-            self._plan_cache.popitem(last=False)
-        return ent
-
-    def _plan_pair(self, cfg, b: int, plen: int, max_new: int, cost_fn, cache_key):
-        return (self._plan_one(cfg, b, plen, "prefill", cost_fn, cache_key),
-                self._plan_one(cfg, b, plen + max_new, "decode", cost_fn, cache_key))
-
-    def step_plan(self, cfg, batch: int, seq_len: int, max_new: int):
-        """Per-iteration plan for an active pool of ``batch`` slots whose
-        sequences fit the ``seq_len`` bucket — the continuous engine's
-        admission/accounting query: the decode-step plan only. Batch and
-        decode horizon are both power-of-two bucketed (like CUDA-graph batch
-        buckets in production engines) so a drift epoch needs only a handful
-        of DP solves; the returned ``batch`` is the bucketed value —
-        normalise per-request energy by it. Served from the plan cache when
-        warm, so a steady-state admission decision costs zero GBDT
-        traversals."""
-        obs = self.sim.observe()
-        cost_fn = self.profiler.cost_fn(obs)
-        cache_key = (state_bucket(obs), self.profiler.correction_version())
-        b = self._new_bucket(batch)
-        seq = self._len_bucket(seq_len) + self._new_bucket(max_new)
-        plan_dec = self._plan_one(cfg, b, seq, "decode", cost_fn, cache_key)
-        return {"batch": b,
-                "step_latency": plan_dec.pred_latency,
-                "step_energy": plan_dec.pred_energy}
-
-    def prefill_plan(self, cfg, batch: int, seq_len: int):
-        """Cached prefill plan for an admission (batch is pow2-bucketed)."""
-        obs = self.sim.observe()
-        cost_fn = self.profiler.cost_fn(obs)
-        cache_key = (state_bucket(obs), self.profiler.correction_version())
-        b = self._new_bucket(batch)
-        plan = self._plan_one(cfg, b, self._len_bucket(seq_len), "prefill",
-                              cost_fn, cache_key)
-        return {"batch": b, "latency": plan.pred_latency,
-                "energy": plan.pred_energy}
-
-    def choose(self, cfg, n_waiting: int, prompt_len: int, max_new: int):
-        obs = self.sim.observe()
-        cost_fn = self.profiler.cost_fn(obs)
-        cache_key = (state_bucket(obs), self.profiler.correction_version())
-        plen = self._len_bucket(prompt_len)
-        best = None
-        for b in self._candidates_for(n_waiting):
-            plan_pre, plan_dec = self._plan_pair(cfg, b, plen, max_new,
-                                                 cost_fn, cache_key)
-            lat = plan_pre.pred_latency + max_new * plan_dec.pred_latency
-            en = plan_pre.pred_energy + max_new * plan_dec.pred_energy
-            # normalise per request: energy-delay product per served request
-            score = (lat / b) * (en / b)
-            if best is None or score < best["score"]:
-                best = {"batch": b, "score": score, "latency": lat, "energy": en,
-                        "plan_prefill": plan_pre, "plan_decode": plan_dec}
-        return best
-
-
-class AdmissionPolicy:
-    """Energy-aware iteration-level admission (the AdaOper objective applied
-    at token granularity): admit a waiting request into the slot pool only
-    when the profiler/partitioner fast path predicts the per-request
-    energy-delay product of a decode step does not worsen, and the added
-    step latency does not push the pool past the SLO. A starvation guard
-    admits regardless once the request's queueing delay exceeds the SLO,
-    and an empty pool always admits (idle silicon costs leakage only)."""
-
-    def __init__(self, scheduler: Optional[AdaOperScheduler] = None,
-                 slo_s: Optional[float] = None, edp_slack: float = 1.05):
-        self.scheduler = scheduler
-        self.slo_s = slo_s
-        self.edp_slack = edp_slack
-        self.log: List[dict] = []
-
-    def decide(self, cfg, n_active: int, seq_len: int, max_new: int,
-               wait_s: float, plan_fn=None) -> Tuple[bool, str]:
-        """``plan_fn(batch)`` overrides the plan source (the engine passes
-        its drift-scoped memo so steady-state decisions cost dict lookups)."""
-        if self.scheduler is None:
-            return True, "no-scheduler"
-        if n_active == 0:
-            return True, "idle-pool"
-        if self.slo_s is not None and wait_s > self.slo_s:
-            return True, "slo-starvation"
-        if plan_fn is None:
-            plan_fn = lambda b: self.scheduler.step_plan(cfg, b, seq_len, max_new)  # noqa: E731
-        cur = plan_fn(n_active)
-        new = plan_fn(n_active + 1)
-        # per-request EDP of one decode step: latency is shared by the actual
-        # batch, energy scales ~linearly with the plan's (bucketed) batch
-        edp_cur = (cur["step_latency"] / n_active) * (cur["step_energy"] / cur["batch"])
-        edp_new = (new["step_latency"] / (n_active + 1)) * (new["step_energy"] / new["batch"])
-        if self.slo_s is not None and new["step_latency"] * max_new > self.slo_s:
-            return False, "slo-violation"
-        if edp_new <= edp_cur * self.edp_slack:
-            return True, "edp-improves"
-        return False, "edp-worsens"
-
-    def _record(self, admit: bool, reason: str, n_active: int, uid) -> None:
-        self.log.append({"admit": admit, "reason": reason,
-                         "n_active": n_active, "uid": uid})
-
-
-@dataclass
-class _ActiveSeq:
-    """A request resident in a cache slot."""
-    req: Request
-    slot: int
-    pos: int  # next cache write position (prompt_len + generated so far)
-    tokens: List[int] = field(default_factory=list)
-    energy_j: float = 0.0
-    # seed-derived per-request sampling stream (None on the greedy path):
-    # token i draws from fold_in(rng, i), so sampled decode is reproducible
-    # under ANY admission order / slot placement / co-resident set
-    rng: Optional[jax.Array] = None
-
-
-class _SlotPool:
-    """Per-model continuous-batching state: the slot cache + allocator plus
-    the dense (max_slots,) token/position arrays fed to the ragged decode."""
-
-    def __init__(self, worker: ModelWorker, max_slots: int):
-        self.cache = worker.init_pool(max_slots)
-        self.alloc = SlotAllocator(max_slots)
-        self.active: Dict[int, _ActiveSeq] = {}
-        self.tokens = np.zeros((max_slots, 1), np.int32)
-        self.pos = np.zeros(max_slots, np.int32)
-        # per-slot valid encoder length (enc-dec models): decode masks each
-        # row's cross-attention to its own encoder region
-        self.enc_len = np.zeros(max_slots, np.int32)
 
 
 class ServingEngine:
@@ -461,66 +60,60 @@ class ServingEngine:
         self.mode = mode
         self.max_slots = max_slots
         self.sampling_seed = sampling_seed
-        # batched admission: one bucketed prefill per same-shape group of
-        # approved requests; False keeps the serial batch-1 reference path
-        # (the way mode="bucketed" keeps the position-synchronous engine)
+        # batched admission: one bucketed prefill per same-shape group;
+        # False keeps the serial batch-1 reference path
         self.batch_prefill = batch_prefill
         self.prefill_batches = 0
         self.prefill_batch_requests = 0
+        # telemetry spine: shared with the device simulator when a
+        # scheduler is attached, a private ledger otherwise
+        self.ledger: EnergyLedger = (
+            scheduler.sim.ledger
+            if scheduler is not None and hasattr(scheduler.sim, "ledger")
+            else EnergyLedger())
         self.admission = AdmissionPolicy(scheduler, slo_s=slo_s)
+        self.admission.ledger = self.ledger
         self.pools: Dict[str, _SlotPool] = {}
         self.priorities: Dict[str, int] = {}
         self.preemptions: Dict[str, int] = {}
         self.drift_events = 0
-        # step plans memoised between drift events: iteration-level
-        # scheduling consults the planner every step, so steady-state
-        # admission/accounting must cost dict lookups, not DP solves
+        # drift-scoped step-plan memo (see repro.serving.planning)
         self._plan_memo: Dict = {}
         self._drift_ref = None
         # virtual clock for trace-driven replay (run_trace): None => wall
-        # time; a float => every latency/wait computation reads it and every
-        # planned prefill/decode step advances it by the predicted latency
+        # time; a float => waits read it and every planned prefill/decode
+        # step advances it by the predicted latency
         self._vtime: Optional[float] = None
 
     def _now(self) -> float:
         return self._vtime if self._vtime is not None else time.time()
 
-    def _stream_key(self, model: str, uid) -> jax.Array:
-        """Per-request sampling stream: seed ⊕ model ⊕ uid. Independent of
-        admission order, slot placement and co-resident requests."""
-        key = jax.random.PRNGKey(self.sampling_seed)
-        key = jax.random.fold_in(key, zlib.crc32(model.encode()) & 0x7FFFFFFF)
-        return jax.random.fold_in(key, int(uid) & 0x7FFFFFFF)
+    # ---- sampling delegates (logic in repro.serving.sampling) ----
+
+    def _stream_key(self, model: str, uid):
+        return sampling.stream_key(self.sampling_seed, model, uid)
 
     def _sample(self, model: str, seq: _ActiveSeq, logits,
                 temperature: float) -> int:
-        """Sample token #len(seq.tokens) of ``seq``'s stream from (V,)
-        logits — the scalar reference for ``_sample_batch``. The stream is
-        established lazily so a sequence admitted greedily can switch to
-        sampled decode mid-flight (same uid-derived stream either way)."""
+        """Scalar reference draw for ``_sample_batch``; the stream is
+        established lazily from the uid (greedy-admitted sequences can
+        switch to sampled decode mid-flight)."""
         if seq.rng is None:
             seq.rng = self._stream_key(model, seq.req.uid)
-        k = jax.random.fold_in(seq.rng, len(seq.tokens))
-        return int(jax.random.categorical(k, jnp.asarray(logits) / temperature))
+        return sampling.sample_one(seq, logits, temperature)
 
     def _sample_batch(self, model: str, seqs: List[_ActiveSeq], logits,
                       temperature: float) -> List[int]:
-        """One vmapped draw for many sequences: token #len(seq.tokens) of
-        each seq's stream from its (V,) logits row — bit-identical to
-        per-slot ``_sample`` calls, with one dispatch and one host sync
-        instead of len(seqs)."""
         for seq in seqs:
             if seq.rng is None:
                 seq.rng = self._stream_key(model, seq.req.uid)
-        keys = jnp.stack([seq.rng for seq in seqs])
-        idx = jnp.asarray([len(seq.tokens) for seq in seqs], jnp.uint32)
-        toks = _sample_rows(keys, idx, jnp.asarray(logits) / temperature)
-        return [int(t) for t in np.asarray(toks)]
+        return sampling.sample_batch(seqs, logits, temperature)
 
     def _row_keys(self, model: str, reqs: List[Request]):
-        """Stacked per-request sampling streams for the bucketed path, so
-        sampled decode is token-identical to the continuous engine."""
+        """Stacked per-request streams for the bucketed path."""
         return jnp.stack([self._stream_key(model, r.uid) for r in reqs])
+
+    # ---- registration + bucketed reference path ----
 
     def add_model(self, name, cfg, params, max_len=512, ctx=ExecContext(),
                   priority: int = 0, max_enc_len: Optional[int] = None):
@@ -537,104 +130,23 @@ class ServingEngine:
         self.queues[model].append(req)
 
     def step(self, model: str, temperature: float = 0.0) -> List[Response]:
-        """Serve one batch from ``model``'s queue (same-length bucket)."""
-        q = self.queues[model]
-        if not q:
-            return []
-        w = self.workers[model]
-        plen = len(q[0].prompt)
-        # one O(n) scan: collect the equal-length bucket and remember where
-        # its members sit so the post-batch rebuild is a single pass too
-        # (was: q.remove(r) per served request -> O(n^2) drain)
-        bucket_idx = [i for i, r in enumerate(q) if len(r.prompt) == plen]
-        bucket = [q[i] for i in bucket_idx]
-        max_new = max(r.max_new_tokens for r in bucket)
-        if self.scheduler is not None:
-            choice = self.scheduler.choose(w.cfg, len(bucket), plen, max_new)
-            bsz = choice["batch"]
-        else:
-            choice = {"energy": float("nan")}
-            bsz = min(8, len(bucket))
-        batch = bucket[:bsz]
-        # decode only as deep as the served batch actually needs — a long
-        # request left in the bucket must not pad this batch's horizon
-        max_new = max(r.max_new_tokens for r in batch)
-        served = set(bucket_idx[:bsz])
-        self.queues[model] = [r for i, r in enumerate(q) if i not in served]
-        prompts = np.stack([r.prompt for r in batch])
-        enc = (np.stack([r.enc_inputs for r in batch])
-               if batch[0].enc_inputs is not None else None)
-        # sampled decode draws every row from its uid-derived stream, so
-        # bucketed and continuous modes emit identical sampled tokens
-        row_keys = (self._row_keys(model, batch) if temperature > 0.0 else None)
-        t0 = time.time()
-        toks = w.generate(prompts, max_new, enc_inputs=enc,
-                          temperature=temperature, row_keys=row_keys)
-        dt = time.time() - t0
-        self.stats[model].append({"batch": bsz, "wall_s": dt,
-                                  "pred_energy_j": choice["energy"]})
-        # predicted batch energy is shared by the requests it served
-        per_req_energy = choice["energy"] / bsz
-        return [Response(r.uid, toks[i, : r.max_new_tokens], dt, per_req_energy)
-                for i, r in enumerate(batch)]
+        """Serve one batch from ``model``'s queue (same-length bucket) —
+        the position-synchronous reference path (``repro.serving.bucketed``)."""
+        return step_bucketed(self, model, temperature)
 
     # ------------------------------------------------------------------
     # continuous batching (iteration-level scheduling)
     # ------------------------------------------------------------------
-
-    # hysteresis thresholds for drift events, sized ~4 sigma above the
-    # resource monitor's observation noise: genuine governor moves and
-    # background bursts trip them, per-observation flicker does not
-    _DRIFT_CPU_F = 0.15
-    _DRIFT_GPU_F = 0.06
-    _DRIFT_BG = 0.12
+    # drift-scoped plan memoisation lives in repro.serving.planning
 
     def _plan_for(self, model: str, batch: int, seq_len: int, max_new: int):
-        """Step plan served from the drift-scoped memo (see __init__)."""
-        sch = self.scheduler
-        key = (model, sch._new_bucket(batch), sch._len_bucket(seq_len),
-               sch._new_bucket(max_new))
-        plan = self._plan_memo.get(key)
-        if plan is None:
-            plan = self._plan_memo[key] = sch.step_plan(
-                self.workers[model].cfg, batch, seq_len, max_new)
-        return plan
+        return planning.step_plan_for(self, model, batch, seq_len, max_new)
 
     def _prefill_plan_for(self, model: str, batch: int, prompt_len: int):
-        """Admission (prefill) plan served from the drift-scoped memo; the
-        batched admission path charges one bucketed-batch plan per group."""
-        sch = self.scheduler
-        key = ("pre", model, sch._new_bucket(batch), sch._len_bucket(prompt_len))
-        plan = self._plan_memo.get(key)
-        if plan is None:
-            plan = self._plan_memo[key] = sch.prefill_plan(
-                self.workers[model].cfg, batch, prompt_len)
-        return plan
+        return planning.prefill_plan_for(self, model, batch, prompt_len)
 
     def _drift_event(self) -> bool:
-        """Compare the observed device state / profiler version against the
-        last planning reference; on a drift event the step-plan memo is
-        invalidated (the scheduler's own caches key on the new state, so
-        subsequent queries replan automatically)."""
-        sch = self.scheduler
-        obs = sch.sim.observe()
-        ver = sch.profiler.correction_version()
-        ref = self._drift_ref
-        self._drift_ref = (obs, ver)
-        if ref is None:
-            return False
-        robs, rver = ref
-        event = (ver != rver
-                 or abs(obs.cpu_f - robs.cpu_f) > self._DRIFT_CPU_F
-                 or abs(obs.gpu_f - robs.gpu_f) > self._DRIFT_GPU_F
-                 or abs(obs.cpu_bg - robs.cpu_bg) > self._DRIFT_BG
-                 or abs(obs.gpu_bg - robs.gpu_bg) > self._DRIFT_BG)
-        if event:
-            self.drift_events += 1
-            self._plan_memo.clear()
-        else:
-            self._drift_ref = ref  # keep the reference until a real move
-        return event
+        return planning.drift_event(self)
 
     def _pool(self, model: str) -> _SlotPool:
         pool = self.pools.get(model)
@@ -659,139 +171,41 @@ class ServingEngine:
         pool.alloc.free(seq.slot)
         del pool.active[seq.slot]
         energy = seq.energy_j if self.scheduler is not None else float("nan")
+        latency = self._now() - seq.req.t_submit
+        self.ledger.emit("request", latency, seq.rails, t_s=seq.req.t_submit,
+                         model=seq.model, uid=seq.req.uid)
         out.append(Response(seq.req.uid,
                             np.asarray(seq.tokens[: seq.req.max_new_tokens], np.int32),
-                            self._now() - seq.req.t_submit, energy))
+                            latency, energy, rails=seq.rails))
 
-    def _validate(self, w: ModelWorker, req: Request) -> Optional[str]:
-        """Reason the request can never be served by ``w``, or None."""
-        if len(req.prompt) + req.max_new_tokens > w.max_len:
-            return (f"prompt {len(req.prompt)} + max_new "
-                    f"{req.max_new_tokens} exceeds max_len {w.max_len}")
-        if w.cfg.is_encoder_decoder:
-            if req.enc_inputs is None:
-                return "encoder-decoder request without enc_inputs"
-            if req.enc_inputs.shape[0] > w.max_enc_len:
-                return (f"enc_inputs length {req.enc_inputs.shape[0]} "
-                        f"exceeds max_enc_len {w.max_enc_len}")
-        return None
+    # admission machinery lives in repro.serving.admission
+    _validate = staticmethod(adm.validate_request)
 
     def _admit(self, model: str, pool: _SlotPool, out: List[Response],
                temperature: float = 0.0) -> int:
-        """Token-granularity admission: pull waiting requests into free slots
-        while the energy-aware policy approves, then prefill the approved
-        set in bucketed same-shape batches (``batch_prefill=False`` keeps
-        the serial batch-1 reference). A request that can never be served
-        (oversized, missing encoder inputs) is rejected with an error
-        ``Response`` and the loop keeps draining — it must not crash the
-        serving loop and strand the queue. Returns #admitted."""
-        w, q = self.workers[model], self.queues[model]
-        admitted: List[_ActiveSeq] = []
-        while q and pool.alloc.n_free:
-            req = q[0]
-            err = self._validate(w, req)
-            if err is not None:
-                q.pop(0)
-                self.admission._record(False, f"invalid: {err}",
-                                       len(pool.active), req.uid)
-                out.append(Response(req.uid, np.zeros(0, np.int32),
-                                    self._now() - req.t_submit, float("nan"),
-                                    error=err))
-                continue
-            seq_len, max_new = self._plan_shape(pool, extra=req)
-            plan_fn = (None if self.scheduler is None else
-                       (lambda b: self._plan_for(model, b, seq_len, max_new)))
-            admit, reason = self.admission.decide(
-                w.cfg, len(pool.active), seq_len, max_new,
-                self._now() - req.t_submit, plan_fn=plan_fn)
-            self.admission._record(admit, reason, len(pool.active), req.uid)
-            if not admit:
-                break
-            q.pop(0)
-            slot = pool.alloc.alloc()
-            seq = _ActiveSeq(req, slot, pos=len(req.prompt))
-            # resident immediately so the next decision's plan shape sees it
-            pool.active[slot] = seq
-            admitted.append(seq)
-        if self.batch_prefill:
-            groups: Dict[tuple, List[_ActiveSeq]] = {}
-            for seq in admitted:
-                enc = seq.req.enc_inputs
-                key = (len(seq.req.prompt),
-                       None if enc is None else enc.shape)
-                groups.setdefault(key, []).append(seq)
-            group_list = list(groups.values())
-        else:
-            group_list = [[seq] for seq in admitted]
-        for group in group_list:
-            self._prefill_group(model, pool, group, out, temperature)
-        return len(admitted)
+        return adm.admit_requests(self, model, pool, out, temperature)
 
     def _prefill_group(self, model: str, pool: _SlotPool,
                        group: List[_ActiveSeq], out: List[Response],
                        temperature: float) -> None:
-        """One bucketed prefill for a same-shape group of admitted requests:
-        the batch is padded to a pow2 bucket (bounding jit compiles), the
-        resulting caches scatter into the slots in one ``write_slots`` call
-        (padding rows are dropped), and the admission plan is charged once
-        per bucket — per-request energy normalised by the plan's bucketed
-        batch, the virtual clock advanced by one bucket latency."""
-        w = self.workers[model]
-        G = len(group)
-        b = AdaOperScheduler._new_bucket(G)
-        pad = b - G
-        prompts = np.stack([s.req.prompt for s in group]
-                           + [group[0].req.prompt] * pad)
-        enc = None
-        if group[0].req.enc_inputs is not None:
-            enc = np.stack([s.req.enc_inputs for s in group]
-                           + [group[0].req.enc_inputs] * pad)
-        logits, g_cache = w.prefill_batch(prompts, enc)
-        slots = np.full(b, pool.alloc.n_slots, np.int32)  # pads drop
-        slots[:G] = [s.slot for s in group]
-        pool.cache = w.write_slots(pool.cache, g_cache, slots)
-        if temperature > 0.0:
-            toks = self._sample_batch(model, group, logits[:G], temperature)
-        else:
-            toks = [int(t) for t in np.asarray(jnp.argmax(logits[:G], -1))]
-        pp = None
-        if self.scheduler is not None:
-            pp = self._prefill_plan_for(model, G, len(group[0].req.prompt))
-            self.scheduler.sim.drain(pp["energy"] * G / pp["batch"])
-            if self._vtime is not None:
-                # virtual replay charges the whole bucket at the planner's
-                # predicted latency (wall-clock mode measures it)
-                self._vtime += pp["latency"]
-        for seq, tok in zip(group, toks):
-            seq.tokens.append(tok)
-            if pp is not None:
-                seq.energy_j += pp["energy"] / pp["batch"]
-            pool.tokens[seq.slot, 0] = tok
-            pool.pos[seq.slot] = seq.pos
-            pool.enc_len[seq.slot] = (0 if seq.req.enc_inputs is None
-                                      else seq.req.enc_inputs.shape[0])
-            if len(seq.tokens) >= seq.req.max_new_tokens:
-                self._retire(pool, seq, out)
-        self.prefill_batches += 1
-        self.prefill_batch_requests += G
+        adm.prefill_group(self, model, pool, group, out, temperature)
 
     def step_continuous(self, model: str, decode: bool = True,
                         check_drift: bool = True,
                         temperature: float = 0.0) -> List[Response]:
-        """One engine iteration for ``model``: admission, then a single
-        ragged decode step over the slot pool, then retirement. With
-        ``decode=False`` (preempted worker) the pool holds its state — no
-        admitted request is ever dropped. ``check_drift=False`` is for
-        drivers (``run_all``) that already ran the per-round drift check.
-        ``temperature > 0`` samples each slot from its own seed-derived RNG
-        stream (reproducible under any admission order)."""
+        """One engine iteration for ``model``: admission, one ragged decode
+        step over the slot pool, retirement. ``decode=False`` (preempted
+        worker) holds the pool's state — no admitted request is dropped;
+        ``check_drift=False`` is for drivers that already ran the per-round
+        drift check; ``temperature > 0`` samples each slot from its own
+        seed-derived stream."""
         w = self.workers[model]
         if check_drift and self.scheduler is not None:
             self._drift_event()  # direct drivers still invalidate stale plans
         pool = self._pool(model)
         out: List[Response] = []
-        # under the virtual clock the iteration is timed in _vtime deltas
-        # (predicted latencies), not host speed; wall mode measures wall time
+        # virtual clock: iterations are timed in _vtime deltas (predicted
+        # latencies), not host speed; wall mode measures wall time
         t0 = self._now()
         n_admitted = self._admit(model, pool, out, temperature)
         if decode and pool.active:
@@ -809,6 +223,11 @@ class ServingEngine:
                 # (step_energy/batch each), so battery drain and summed
                 # per-request energy stay consistent in the fleet report
                 self.scheduler.sim.drain(step_energy * n_active / sp["batch"])
+                self.ledger.emit(
+                    "decode", sp["step_latency"],
+                    EnergyBreakdown.from_total(
+                        step_energy * n_active / sp["batch"], sp["rails"]),
+                    t_s=t0, model=model, n_active=n_active)
                 if self._vtime is not None:
                     self._vtime += sp["step_latency"]
             seqs = list(pool.active.values())
@@ -824,7 +243,8 @@ class ServingEngine:
                 seq.pos += 1
                 if self.scheduler is not None:
                     # energy of the (bucketed-batch) step plan, shared per slot
-                    seq.energy_j += step_energy / sp["batch"]
+                    seq.rails += EnergyBreakdown.from_total(
+                        step_energy / sp["batch"], sp["rails"])
                 pool.tokens[seq.slot, 0] = tok
                 pool.pos[seq.slot] = seq.pos
                 if len(seq.tokens) >= seq.req.max_new_tokens:
@@ -856,6 +276,7 @@ class ServingEngine:
                 # higher-priority pools while the planner re-solves
                 victim = min(decoding, key=lambda m: (self.priorities[m], m))
                 self.preemptions[victim] += 1
+                self.ledger.count("preemptions")
         for m in busy:
             out.extend(self.step_continuous(m, decode=(m != victim),
                                             check_drift=False,
@@ -863,12 +284,8 @@ class ServingEngine:
 
     def run_all(self, temperature: float = 0.0) -> List[Response]:
         """Round-robin across models until all queues drain (the paper's
-        concurrent-DNN workload). Continuous mode interleaves models at
-        token granularity, declares the co-execution level to the device
-        simulator, and preempts the lowest-priority busy worker for one
-        iteration when a drift event invalidates the cached plans. Sampled
-        decode (``temperature > 0``) draws each slot from its own
-        seed-derived stream — see ``_stream_key``."""
+        concurrent-DNN workload); continuous mode interleaves models at
+        token granularity under the declared co-execution level."""
         if self.mode == "bucketed":
             out = []
             while any(self.queues.values()):
@@ -887,18 +304,13 @@ class ServingEngine:
 
     def run_trace(self, arrivals, start_t: float = 0.0,
                   temperature: float = 0.0) -> List[Response]:
-        """Trace-driven serving in *virtual* time (the fleet replay
-        harness's pluggable arrival source).
-
-        ``arrivals``: iterable of ``(t_arrival_s, model_name, Request)``
-        tuples (any order). The engine clock starts at ``start_t`` and
-        advances by the planner's *predicted* prefill/decode-step latencies;
-        idle gaps jump to the next arrival while the device simulator relaxes
-        at idle and drains its battery at the leakage floor. Response
-        latencies are therefore deterministic simulated seconds measured from
-        the trace arrival time (queueing included) — not wall time. Requires
-        continuous mode and a scheduler (without one the clock cannot
-        advance)."""
+        """Trace-driven serving in *virtual* time: ``arrivals`` is an
+        iterable of ``(t_arrival_s, model_name, Request)`` (any order). The
+        clock starts at ``start_t`` and advances by the planner's
+        *predicted* prefill/decode-step latencies; idle gaps jump to the
+        next arrival while the simulator relaxes and drains at the leakage
+        floor. Latencies are deterministic simulated seconds measured from
+        arrival (queueing included). Requires continuous mode + scheduler."""
         if self.mode != "continuous" or self.scheduler is None:
             raise ValueError("run_trace requires mode='continuous' and a "
                              "scheduler (the virtual clock advances by "

@@ -1,0 +1,153 @@
+"""Per-model serving worker: jitted prefill/decode against a preallocated
+KV/state cache, batch generation (bucketed reference path) and the
+slot-pool primitives the continuous engine drives.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.serving.sampling import _sample_rows
+from repro.sharding.context import ExecContext
+
+
+class ModelWorker:
+    def __init__(self, name: str, cfg, params, max_len: int = 512,
+                 ctx: ExecContext = ExecContext(),
+                 max_enc_len: Optional[int] = None):
+        self.name = name
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.ctx = ctx
+        # enc-dec slot pools preallocate the cross-attention cache region at
+        # this length; decoder-only models carry no encoder region
+        self.max_enc_len = (max_enc_len if max_enc_len is not None
+                            else (max_len if cfg.is_encoder_decoder else 0))
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._write = jax.jit(model_lib.write_cache_slot, donate_argnums=(0,))
+        self._write_many = jax.jit(model_lib.write_cache_slots,
+                                   donate_argnums=(0,))
+
+    def _prefill_impl(self, params, cache, tokens, enc_inputs=None,
+                      pad_mask=None):
+        logits, cache = model_lib.prefill(params, self.cfg, tokens, cache, self.ctx,
+                                          enc_inputs=enc_inputs,
+                                          pad_mask=pad_mask)
+        return logits[:, -1], cache
+
+    def _decode_impl(self, params, cache, token, pos, enc_len=None):
+        logits, cache = model_lib.decode_step(params, self.cfg, token, cache,
+                                              pos, self.ctx, enc_len=enc_len)
+        return logits[:, -1], cache
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 enc_inputs=None, temperature: float = 0.0, seed: int = 0,
+                 row_keys=None, pad_mask=None):
+        """prompts (B, S) equal-length. Greedy (T=0) or sampled decode.
+
+        ``row_keys`` (B, 2) uint32: per-request sampling streams — token i of
+        row b draws from ``fold_in(row_keys[b], i)``, matching the continuous
+        engine's seed⊕model⊕uid⊕token-index streams so both serving modes
+        emit identical sampled tokens. ``None`` keeps the legacy split-chain
+        RNG (shared across rows) seeded by ``seed``.
+
+        ``pad_mask`` (B, S) bool: valid-token mask for LEFT-padded prompts
+        bucketed to a shared length — supported for pure-SSM stacks only
+        (the scan passes masked positions through untouched; see
+        ``docs/serving.md`` §Pad-safe SSM prompts)."""
+        B, S = prompts.shape
+        if pad_mask is not None and self.cfg.is_encoder_decoder:
+            # enc-dec decoders carry attention layers, which would silently
+            # mis-serve left-padded prompts — refuse like the stack does
+            raise ValueError("pad_mask is only supported for pure-SSM "
+                             "stacks, not encoder-decoder models")
+        enc_len = enc_inputs.shape[1] if enc_inputs is not None else 0
+        cache = model_lib.init_cache(self.cfg, B, self.max_len, enc_len=enc_len)
+        args = (self.params, cache, jnp.asarray(prompts))
+        if self.cfg.is_encoder_decoder:
+            logits, cache = self._prefill(*args, jnp.asarray(enc_inputs))
+        elif pad_mask is not None:
+            logits, cache = self._prefill(*args, pad_mask=jnp.asarray(pad_mask))
+        else:
+            logits, cache = self._prefill(*args)
+        out = np.zeros((B, max_new), np.int32)
+        rng = jax.random.PRNGKey(seed)
+        tok = self._pick(logits, temperature, rng, row_keys, 0)
+        for i in range(max_new):
+            out[:, i] = np.asarray(tok)[:, 0]
+            if i == max_new - 1:
+                break
+            logits, cache = self._decode(self.params, cache, tok, jnp.int32(S + i))
+            rng, k = jax.random.split(rng)
+            tok = self._pick(logits, temperature, k, row_keys, i + 1)
+        return out
+
+    @staticmethod
+    def _pick(logits, temperature, rng, row_keys=None, token_idx=0):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        if row_keys is not None:
+            idx = jnp.full((row_keys.shape[0],), token_idx, jnp.uint32)
+            return _sample_rows(row_keys, idx,
+                                logits / temperature)[:, None].astype(jnp.int32)
+        return jax.random.categorical(rng, logits / temperature)[:, None].astype(jnp.int32)
+
+    # ---- continuous-batching primitives (slot-pool cache) ----
+
+    def init_pool(self, max_slots: int):
+        """Preallocated KV/state cache with one row per request slot (plus a
+        ``max_enc_len`` encoder cross-attention region for enc-dec models)."""
+        return model_lib.init_cache(self.cfg, max_slots, self.max_len,
+                                    enc_len=self.max_enc_len)
+
+    def prefill_one(self, prompt: np.ndarray, enc_inputs=None):
+        """Prefill a single request at its exact length. Returns
+        (last-position logits (1,V), batch-1 cache to scatter into a slot)."""
+        return self.prefill_batch(
+            prompt[None], None if enc_inputs is None else enc_inputs[None])
+
+    def prefill_batch(self, prompts: np.ndarray, enc_inputs=None):
+        """Batched admission prefill: ``prompts`` (G, S) equal-length (the
+        caller pads G to a pow2 bucket). Returns (last-position logits (G,V),
+        batch-G cache whose rows scatter into slots via ``write_slots``).
+        Every op is row-independent, so each row is bit-identical to a
+        ``prefill_one`` of the same prompt."""
+        G = prompts.shape[0]
+        cache = model_lib.init_cache(self.cfg, G, self.max_len,
+                                     enc_len=self.max_enc_len)
+        args = (self.params, cache, jnp.asarray(prompts))
+        if self.cfg.is_encoder_decoder:
+            return self._prefill(*args, jnp.asarray(enc_inputs))
+        return self._prefill(*args)
+
+    def write_slot(self, pool_cache, one_cache, slot: int):
+        return self._write(pool_cache, one_cache, slot)
+
+    def write_slots(self, pool_cache, group_cache, slots: np.ndarray):
+        """Scatter a batched prefill cache into the rows named by ``slots``;
+        out-of-range entries (pow2 batch padding) are dropped."""
+        return self._write_many(pool_cache, group_cache,
+                                jnp.asarray(slots, dtype=jnp.int32))
+
+    def decode_pool(self, pool_cache, tokens: np.ndarray, pos: np.ndarray,
+                    enc_len=None):
+        """One ragged decode step over the whole slot pool. ``tokens``
+        (max_slots,1) int32, ``pos`` (max_slots,) int32 per-slot write
+        positions, ``enc_len`` (max_slots,) per-slot encoder lengths for
+        enc-dec models (masks each row's cross-attention to its own encoder
+        region). Reuses the jitted decode body — a (B,) position vector
+        traces the ragged path in the model. Returns (greedy next tokens
+        (max_slots,) np.int32, logits (max_slots, V) for per-slot sampling,
+        cache)."""
+        logits, pool_cache = self._decode(
+            self.params, pool_cache, jnp.asarray(tokens),
+            jnp.asarray(pos, dtype=jnp.int32),
+            None if enc_len is None else jnp.asarray(enc_len, dtype=jnp.int32))
+        return (np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)),
+                logits, pool_cache)

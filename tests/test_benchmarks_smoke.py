@@ -5,6 +5,8 @@ import json
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
@@ -37,6 +39,10 @@ def test_run_smoke_emits_json_and_asserts_fast_path(tmp_path, capsys):
         "continuous serving diverged from the bucketed reference"
     assert conc["throughput_speedup"] >= 1.3
     assert conc["energy_per_req_ratio"] <= 1.0 + 1e-6
+    # ledger-derived per-rail attribution of the predicted serving energy
+    rails = conc["modes"]["continuous"]["energy_rails_j"]
+    assert set(rails) == {"cpu", "gpu", "bus"}
+    assert sum(rails.values()) > 0.0
 
     fleet = json.loads((tmp_path / "BENCH_fleet.json").read_text())
     assert fleet["smoke"] is True
@@ -47,3 +53,14 @@ def test_run_smoke_emits_json_and_asserts_fast_path(tmp_path, capsys):
     assert set(f["latency_s"]) == {"p50", "p95", "p99"}
     assert 0.0 <= f["slo_attainment"] <= 1.0
     assert len(fleet["devices"]) == 2  # the committed smoke configuration
+    # fleet rails fold from the same ledger and cover the total energy
+    fr = f["energy_rails_j"]
+    assert set(fr) == {"cpu", "gpu", "bus"}
+    assert sum(fr.values()) == pytest.approx(f["energy_j"], rel=1e-6)
+
+    # per-scenario gates beyond `mixed` (voice/video), each vs its baseline
+    for scen in ("voice", "video"):
+        js = json.loads((tmp_path / f"BENCH_fleet_{scen}.json").read_text())
+        assert js["smoke"] is True
+        assert js["config"]["scenario"] == scen
+        assert js["fleet"]["n_requests"] > 0

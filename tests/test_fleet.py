@@ -12,13 +12,13 @@ import pytest
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from repro.fleet import (
+    SCENARIOS,
+    TIERS,
     DeviceMetrics,
     DeviceReplay,
     FleetReplay,
     FleetReport,
     RequestRecord,
-    SCENARIOS,
-    TIERS,
     latency_percentiles,
     make_trace,
     sample_population,

@@ -106,10 +106,11 @@ def test_cache_shardings_rules():
     import jax
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
+    import functools
+
     from repro.configs.base import get_config, reduced
     from repro.models import model as model_lib
     from repro.sharding.partition_specs import cache_shardings
-    import functools
 
     cfg = reduced(get_config("tinyllama-1.1b"))
     cache_sds = jax.eval_shape(functools.partial(model_lib.init_cache, cfg, 2, 16))

@@ -1,0 +1,225 @@
+"""Telemetry spine: per-rail energy conservation against the simulator's
+ground truth, and controller / engine / fleet agreement when computed from
+the same ledger."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import AdaOperController, DeviceSim, RuntimeEnergyProfiler, build_yolo_graph
+from repro.core.telemetry import EnergyBreakdown, EnergyLedger, fold_energy
+
+
+def _close(a, b, rel=1e-9):
+    assert math.isclose(a, b, rel_tol=rel, abs_tol=1e-15), (a, b)
+
+
+# ---------------------------------------------------------------------------
+# EnergyBreakdown / EnergyLedger primitives
+# ---------------------------------------------------------------------------
+
+
+def test_breakdown_add_fractions_and_unattributed():
+    a = EnergyBreakdown(cpu_j=1.0, gpu_j=2.0, bus_j=1.0, total_j=4.0)
+    b = EnergyBreakdown.from_total(8.0, (0.5, 0.25, 0.25))
+    s = a + b
+    _close(s.total_j, 12.0)
+    _close(s.cpu_j, 5.0)
+    _close(s.gpu_j, 4.0)
+    _close(s.bus_j, 3.0)
+    assert s.fractions() == pytest.approx((5 / 12, 4 / 12, 3 / 12))
+    # unattributed predicted energy: total recorded, rails empty
+    u = EnergyBreakdown.from_total(3.0, None)
+    assert u.fractions() is None
+    _close(u.unattributed_j, 3.0)
+
+
+def test_ledger_folds_by_kind_and_model():
+    led = EnergyLedger()
+    led.emit("infer", 0.1, EnergyBreakdown(1, 2, 0, total_j=3.0), model="a")
+    led.emit("request", 0.2, EnergyBreakdown(0, 1, 0, total_j=1.0), model="a", uid=0)
+    led.emit("request", 0.3, EnergyBreakdown(2, 0, 0, total_j=2.0), model="b", uid=1)
+    led.count("drift_events")
+    led.count("drift_events", 2)
+    assert led.counters == {"drift_events": 3}
+    _close(led.total_energy(kind="request").total_j, 3.0)
+    by_model = led.energy_by_model(kind="request")
+    _close(by_model["a"].total_j, 1.0)
+    _close(by_model["b"].total_j, 2.0)
+    assert [e.uid for e in led.requests()] == [0, 1]
+    assert [e.uid for e in led.requests(model="b")] == [1]
+    led.clear()
+    assert len(led) == 0 and led.counters == {}
+
+
+# ---------------------------------------------------------------------------
+# simulator: rails conserve the ground-truth joules, bit-identical totals
+# ---------------------------------------------------------------------------
+
+
+def test_exec_op_rails_conserve_ground_truth():
+    g = build_yolo_graph()
+    for preset in ("moderate", "high", "idle"):
+        sim = DeviceSim(preset, seed=1)
+        prev = 1.0
+        for op, alpha in zip(g.nodes, [0.0, 0.25, 0.5, 0.875, 1.0] * 2):
+            lat_rails, eb = sim.exec_op_rails(op, alpha, prev)
+            lat, en = sim.exec_op(op, alpha, prev)
+            # exec_op is the rails total, bit-for-bit (the historical value)
+            assert en == eb.total_j and lat == lat_rails
+            # conservation: cpu + gpu + bus == ground truth (associativity)
+            _close(eb.sum_of_rails_j, eb.total_j)
+            assert eb.cpu_j > 0 and eb.gpu_j > 0 and eb.bus_j >= 0
+            prev = alpha
+            sim.step(lat)
+
+
+def test_rail_fractions_sum_to_one():
+    g = build_yolo_graph()
+    sim = DeviceSim("moderate", seed=0)
+    fr = sim.rail_fractions(g, [0.5] * len(g.nodes))
+    assert fr is not None
+    _close(sum(fr), 1.0)
+    # an all-GPU plan must attribute most energy to the gpu rail
+    fr_gpu = sim.rail_fractions(g, [1.0] * len(g.nodes))
+    assert fr_gpu[1] > fr_gpu[0]
+
+
+def test_idle_event_accounts_leakage():
+    sim = DeviceSim("moderate", seed=0, battery_capacity_j=100.0)
+    sim.advance_idle(2.0)
+    (ev,) = sim.ledger.select(kind="idle")
+    _close(ev.energy.total_j, sim.idle_power_w() * 2.0)
+    _close(ev.energy.sum_of_rails_j, ev.energy.total_j)
+    _close(100.0 - sim.battery_j, ev.energy.total_j)
+
+
+# ---------------------------------------------------------------------------
+# controller: events agree exactly with the legacy stats tallies
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def profiler():
+    g = build_yolo_graph()
+    p = RuntimeEnergyProfiler(use_gru=False, seed=0)
+    p.offline_calibrate([g], n_samples=400, seed=0)
+    return p
+
+
+def test_controller_infer_events_match_stats(profiler):
+    g = build_yolo_graph()
+    sim = DeviceSim("moderate", seed=3)
+    ctl = AdaOperController(sim, profiler)
+    for _ in range(5):
+        ctl.run_inference(g)
+    st = ctl.stats[g.name]
+    events = sim.ledger.select(kind="infer")
+    assert len(events) == 5
+    # ledger events carry the exact floats the stats tallies accumulated
+    assert [e.energy.total_j for e in events] == st.energies
+    assert [e.latency_s for e in events] == st.latencies
+    for e in events:
+        _close(e.energy.sum_of_rails_j, e.energy.total_j)
+    assert sim.ledger.counters["repartitions"] == st.repartitions
+
+
+def test_run_trace_request_events_conserve_battery(profiler):
+    g = build_yolo_graph()
+    sim = DeviceSim("moderate", seed=4, battery_capacity_j=50.0)
+    ctl = AdaOperController(sim, profiler)
+    arrivals = [(0.0, g), (0.05, g), (1.0, g)]
+    recs = ctl.run_trace(arrivals)
+    reqs = sim.ledger.requests()
+    assert len(reqs) == len(recs) == 3
+    # request events carry the exact energies/latencies of the records
+    assert [e.energy.total_j for e in reqs] == [r.energy_j for r in recs]
+    assert [e.latency_s for e in reqs] == [r.latency_s for r in recs]
+    # battery conservation: everything drained is on the ledger (request
+    # energy + idle leakage), up to float accumulation order
+    drained = 50.0 - sim.battery_j
+    on_ledger = (fold_energy(reqs).total_j
+                 + fold_energy(sim.ledger.select(kind="idle")).total_j)
+    _close(drained, on_ledger, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# engine + fleet: one ledger, all layers agree
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_report_folds_ledger_exactly():
+    """Graph-backend fleet replay: DeviceMetrics energy (total AND per-rail)
+    equals the fold of the device ledger's request events — controller,
+    records and report all read one stream."""
+    from repro.fleet import make_trace, sample_population
+    from repro.fleet.replay import DeviceReplay, default_graph_registry
+
+    pop = sample_population(1, seed=5)
+    dr = DeviceReplay(pop[0], default_graph_registry(), calib_samples=120)
+    trace = make_trace("ar", 1.0, seed=5)
+    records, counters = dr.run(trace)
+    metrics = dr.metrics(records, counters)
+    fold = fold_energy(dr.sim.ledger.requests())
+    _close(metrics.energy_j, fold.total_j, rel=1e-12)
+    _close(metrics.energy_rails_j["cpu"], fold.cpu_j, rel=1e-12)
+    _close(metrics.energy_rails_j["gpu"], fold.gpu_j, rel=1e-12)
+    _close(metrics.energy_rails_j["bus"], fold.bus_j, rel=1e-12)
+    # ground-truth physics path: everything is rail-attributed
+    _close(fold.sum_of_rails_j, fold.total_j)
+    assert metrics.n_requests == len(trace)
+
+
+def test_device_replay_rerunnable_with_per_run_windows():
+    """The ledger is cumulative over the device's life; DeviceReplay.run
+    must fold only its own window, so back-to-back runs on one device
+    yield independent records and delta counters."""
+    from repro.fleet import make_trace, sample_population
+    from repro.fleet.replay import DeviceReplay, default_graph_registry
+
+    pop = sample_population(1, seed=6)
+    dr = DeviceReplay(pop[0], default_graph_registry(), calib_samples=120)
+    t1 = make_trace("ar", 0.8, seed=6)
+    r1, c1 = dr.run(t1)
+    t2 = make_trace("video", 1.2, seed=7)
+    r2, c2 = dr.run(t2)  # must not KeyError on t1's uids or double-count
+    assert sorted(rec.uid for rec in r1) == [r.uid for r in t1]
+    assert sorted(rec.uid for rec in r2) == [r.uid for r in t2]
+    # counters are per-run deltas: the cumulative ledger equals their sum
+    total = dr.sim.ledger.counters["repartitions"]
+    assert c1["repartitions"] + c2["repartitions"] == total
+
+
+def test_engine_request_events_match_responses():
+    """Continuous engine: per-request ledger events carry exactly the
+    responses' predicted energy, and rails attribution covers the total
+    (plan-derived fractions sum to 1)."""
+    import jax
+
+    from repro.configs.base import get_config, reduced
+    from repro.core import build_transformer_graph
+    from repro.models import init_params
+    from repro.serving.engine import AdaOperScheduler, Request, ServingEngine
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prof = RuntimeEnergyProfiler(use_gru=False)
+    prof.offline_calibrate([build_transformer_graph(cfg, 2, 32)],
+                           n_samples=400, seed=0)
+    sim = DeviceSim("moderate", seed=0)
+    eng = ServingEngine(scheduler=AdaOperScheduler(prof, sim), max_slots=4)
+    assert eng.ledger is sim.ledger  # one spine, simulator-owned
+    eng.add_model("m", cfg, params, max_len=48)
+    r = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit("m", Request(i, r.integers(1, cfg.vocab_size, 12, dtype=np.int32), 3))
+    responses = {x.uid: x for x in eng.run_all()}
+    events = eng.ledger.requests(model="m")
+    assert sorted(e.uid for e in events) == sorted(responses)
+    for e in events:
+        assert e.energy.total_j == responses[e.uid].energy_j_pred
+        # predicted energy is fully rail-attributed via plan fractions
+        _close(e.energy.sum_of_rails_j, e.energy.total_j, rel=1e-9)
+    # engine iteration events cover the decode steps
+    assert eng.ledger.select(kind="decode")
+    assert eng.ledger.select(kind="prefill")

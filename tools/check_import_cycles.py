@@ -1,0 +1,138 @@
+"""Import-cycle check over ``src/repro`` (CI lint job).
+
+Builds the intra-package import graph with ``ast`` (no code execution) and
+fails with the offending cycle(s) if the module graph is not acyclic — so
+the ``repro.serving`` package split (and any future decomposition) stays
+layered. ``from repro.x import name`` counts as a dependency on
+``repro.x.name`` when that resolves to a module, else on ``repro.x``.
+
+Usage:  python tools/check_import_cycles.py [src-root]
+Exit status 1 when a cycle exists.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Dict, List, Set
+
+PACKAGE = "repro"
+
+
+def module_name(path: str, src_root: str) -> str:
+    rel = os.path.relpath(path, src_root)
+    parts = rel[:-3].split(os.sep)  # strip .py
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def collect_modules(src_root: str) -> Dict[str, str]:
+    mods: Dict[str, str] = {}
+    pkg_root = os.path.join(src_root, PACKAGE)
+    for dirpath, _, files in os.walk(pkg_root):
+        if "__pycache__" in dirpath:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                path = os.path.join(dirpath, f)
+                mods[module_name(path, src_root)] = path
+    return mods
+
+
+def resolve(target: str, mods: Dict[str, str]) -> str | None:
+    """Longest known-module prefix of ``target`` (or None if external)."""
+    parts = target.split(".")
+    for n in range(len(parts), 0, -1):
+        cand = ".".join(parts[:n])
+        if cand in mods:
+            return cand
+    return None
+
+
+def imports_of(mod: str, path: str, mods: Dict[str, str]) -> Set[str]:
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    deps: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                dep = resolve(alias.name, mods)
+                if dep:
+                    deps.add(dep)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:  # relative import inside the package
+                parts = mod.split(".")
+                if not mods[mod].endswith("__init__.py"):
+                    parts = parts[:-1]  # containing package
+                parts = parts[: len(parts) - (node.level - 1)]
+                stem = ".".join(parts + node.module.split(".")
+                                if node.module else parts)
+            else:
+                stem = node.module or ""
+            if not stem:
+                continue
+            for alias in node.names:
+                dep = resolve(f"{stem}.{alias.name}", mods) or resolve(stem, mods)
+                if dep:
+                    deps.add(dep)
+    deps.discard(mod)
+    return deps
+
+
+def find_cycles(graph: Dict[str, Set[str]]) -> List[List[str]]:
+    """Iterative DFS cycle detection; reports each back-edge's cycle."""
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {m: WHITE for m in graph}
+    stack: List[str] = []
+    cycles: List[List[str]] = []
+
+    def dfs(start: str) -> None:
+        # explicit stack of (node, iterator) to survive deep graphs
+        frames = [(start, iter(sorted(graph[start])))]
+        color[start] = GRAY
+        stack.append(start)
+        while frames:
+            node, it = frames[-1]
+            advanced = False
+            for nxt in it:
+                if color.get(nxt, BLACK) == WHITE:
+                    color[nxt] = GRAY
+                    stack.append(nxt)
+                    frames.append((nxt, iter(sorted(graph[nxt]))))
+                    advanced = True
+                    break
+                if color.get(nxt) == GRAY:
+                    cycles.append(stack[stack.index(nxt):] + [nxt])
+            if not advanced:
+                color[node] = BLACK
+                stack.pop()
+                frames.pop()
+
+    for m in sorted(graph):
+        if color[m] == WHITE:
+            dfs(m)
+    return cycles
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    src_root = args[0] if args else os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    mods = collect_modules(src_root)
+    if not mods:
+        print(f"no modules found under {src_root}/{PACKAGE}", file=sys.stderr)
+        return 2
+    graph = {m: imports_of(m, p, mods) for m, p in mods.items()}
+    cycles = find_cycles(graph)
+    if cycles:
+        print(f"import cycles in {PACKAGE} ({len(cycles)}):")
+        for cyc in cycles:
+            print("  " + " -> ".join(cyc))
+        return 1
+    print(f"{PACKAGE}: {len(mods)} modules, import graph is acyclic")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
