@@ -16,9 +16,10 @@ graph path on the same virtual timeline), so ``mixed`` traces exercise the
 full vision+LLM co-execution scenario.
 
 Smoke mode (``benchmarks/run.py --smoke`` and the CI ``fleet-smoke`` step)
-runs four fixed configurations — the 2-device/6s mixed graph replay, the
-1-device/3s mixed serving replay, and the per-scenario 1-device voice and
-video graph replays — gating each against its committed baseline
+runs five fixed configurations — the 2-device/6s mixed graph replay, the
+1-device/3s mixed serving replay, the per-scenario 1-device voice and
+video graph replays, and the 1-device chaos_voice serving replay under the
+seeded fault schedule — gating each against its committed baseline
 (``benchmarks/baselines/BENCH_fleet*.json``): identical request count (the
 replay is deterministic), fleet energy/request within ±25%, and SLO
 attainment no more than 0.15 below the baseline
@@ -34,12 +35,22 @@ from benchmarks.baseline_gate import BASELINE_DIR, gate_fleet
 
 BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_fleet.json")
 SERVING_BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_fleet_serving.json")
+CHAOS_BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_fleet_chaos.json")
 
 # the smoke/baseline configurations — keep in lockstep with the committed
 # baselines (regenerate them whenever these change)
 SMOKE = dict(devices=2, scenario="mixed", seed=0, duration=6.0, calib=250)
 SERVING_SMOKE = dict(devices=1, scenario="mixed", seed=2, duration=3.0,
                      calib=120)
+# chaos gate: the serving backend replayed under the deterministic
+# chaos_voice fault schedule (gpu dropout, thermal throttle, battery
+# critical; repro.faults.plan) — degraded-mode SLO, energy/request and the
+# exact fault/recovery/shed accounting are all pinned to the baseline
+CHAOS_SMOKE = dict(devices=1, scenario="chaos_voice", seed=5, duration=10.0,
+                   calib=120)
+CHAOS_COUNTER_KEYS = ("faults", "recoveries", "rejected", "shed",
+                      "deadline_requeues", "deadline_misses",
+                      "deadline_evictions", "aborted", "fault_replans")
 # per-scenario baselines beyond `mixed` (ROADMAP open item): one device
 # each, sized so the whole family stays a smoke-speed gate
 SCENARIO_SMOKE = {
@@ -53,6 +64,9 @@ REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet --smoke-config "
 SERVING_REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet "
                      "--serving-smoke-config "
                      "--json benchmarks/baselines/BENCH_fleet_serving.json")
+CHAOS_REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet "
+                   "--chaos-smoke-config "
+                   "--json benchmarks/baselines/BENCH_fleet_chaos.json")
 
 
 def scenario_baseline_path(scenario: str) -> str:
@@ -73,14 +87,21 @@ def gate(out: dict, baseline_path: str) -> None:
     cfg = out.get("config", {})
     backend = cfg.get("backend", "graph")
     scenario = cfg.get("scenario", "mixed")
-    if backend == "serving":
+    counter_keys = ()
+    if scenario.startswith("chaos"):
+        # the fault schedule is deterministic in (scenario, duration, seed),
+        # so degraded-mode accounting must match the baseline exactly
+        regen = CHAOS_REGEN_CMD
+        counter_keys = CHAOS_COUNTER_KEYS
+    elif backend == "serving":
         regen = SERVING_REGEN_CMD
     elif scenario in SCENARIO_SMOKE:
         regen = scenario_regen_cmd(scenario)
     else:
         regen = REGEN_CMD
     gate_fleet(out, baseline_path, regen, ENERGY_TOL, SLO_TOL,
-               label=f"fleet[{backend}:{scenario}]")
+               label=f"fleet[{backend}:{scenario}]",
+               counter_keys=counter_keys)
 
 
 def _default_serving_models():
@@ -165,6 +186,20 @@ def serving_smoke_run(json_path: str = None, smoke: bool = True,
                baseline_path=baseline_path, backend="serving", emit=emit)
 
 
+def chaos_smoke_run(json_path: str = None, smoke: bool = True,
+                    baseline_path: str = CHAOS_BASELINE_PATH,
+                    emit=print) -> dict:
+    """The fixed chaos configuration: the serving backend replayed under
+    the seeded ``chaos_voice`` fault schedule. Gated against
+    ``BENCH_fleet_chaos.json`` — degraded-mode SLO/energy within the shared
+    tolerances plus exact fault/recovery/shed counter accounting."""
+    return run(devices=CHAOS_SMOKE["devices"],
+               scenario=CHAOS_SMOKE["scenario"],
+               seed=CHAOS_SMOKE["seed"], duration=CHAOS_SMOKE["duration"],
+               calib=CHAOS_SMOKE["calib"], json_path=json_path, smoke=smoke,
+               baseline_path=baseline_path, backend="serving", emit=emit)
+
+
 def scenario_smoke_run(scenario: str, json_path: str = None,
                        smoke: bool = True, baseline_path: str = None,
                        emit=print) -> dict:
@@ -203,6 +238,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--serving-smoke-config", action="store_true",
                     help="use the fixed mixed-trace serving smoke/baseline "
                          "configuration")
+    ap.add_argument("--chaos-smoke-config", action="store_true",
+                    help="use the fixed chaos (fault-injected serving) "
+                         "smoke/baseline configuration (gated vs "
+                         "BENCH_fleet_chaos.json)")
     ap.add_argument("--scenario-smoke-config", default=None,
                     choices=sorted(SCENARIO_SMOKE),
                     help="use a fixed per-scenario smoke/baseline "
@@ -210,18 +249,22 @@ def main(argv=None) -> dict:
                          ".json)")
     args = ap.parse_args(argv)
     if args.smoke and not (args.smoke_config or args.serving_smoke_config
+                           or args.chaos_smoke_config
                            or args.scenario_smoke_config):
         # the baselines are recorded for the fixed smoke configurations only;
         # gating an arbitrary run against them would fail with a misleading
         # "no longer deterministic" request-count mismatch
         ap.error("--smoke gates against a committed baseline, which is "
                  "recorded for a fixed smoke configuration; pass "
-                 "--smoke-config, --serving-smoke-config or "
-                 "--scenario-smoke-config with --smoke")
+                 "--smoke-config, --serving-smoke-config, "
+                 "--chaos-smoke-config or --scenario-smoke-config with "
+                 "--smoke")
     if args.smoke_config:
         return smoke_run(json_path=args.json, smoke=args.smoke)
     if args.serving_smoke_config:
         return serving_smoke_run(json_path=args.json, smoke=args.smoke)
+    if args.chaos_smoke_config:
+        return chaos_smoke_run(json_path=args.json, smoke=args.smoke)
     if args.scenario_smoke_config:
         return scenario_smoke_run(args.scenario_smoke_config,
                                   json_path=args.json, smoke=args.smoke)

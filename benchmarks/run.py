@@ -11,10 +11,12 @@ reference with bit-identical plans, the continuous serving engine must be
 token-identical to the bucketed reference at >=1.3x throughput with no
 >20% speedup regression against the committed baseline JSON
 (``benchmarks/baselines/BENCH_concurrent.json``), and the fleet replays
-(2-device graph + 1-device mixed-trace serving) must match
-``benchmarks/baselines/BENCH_fleet.json`` / ``BENCH_fleet_serving.json``
-(identical request count, energy/request and SLO attainment within
-tolerance) — so
+(2-device graph + 1-device mixed-trace serving + 1-device chaos serving
+under the seeded fault schedule) must match
+``benchmarks/baselines/BENCH_fleet.json`` / ``BENCH_fleet_serving.json`` /
+``BENCH_fleet_chaos.json`` (identical request count, energy/request and
+SLO attainment within tolerance; the chaos gate additionally pins the
+fault/recovery/shed counters exactly) — so
 planning-cost, serving and fleet regressions fail loudly (the test suite
 invokes this). A missing baseline file fails with a regeneration recipe,
 not a traceback (see docs/fleet.md).
@@ -94,6 +96,10 @@ def main(argv=None) -> None:
             for scenario in sorted(bench_fleet.SCENARIO_SMOKE):
                 bench_fleet.scenario_smoke_run(
                     scenario, json_path=jp(f"BENCH_fleet_{scenario}.json"))
+            # chaos smoke: the serving backend under the seeded chaos_voice
+            # fault schedule — degraded-mode SLO/energy plus exact
+            # fault/recovery/shed counters vs BENCH_fleet_chaos.json
+            bench_fleet.chaos_smoke_run(json_path=jp("BENCH_fleet_chaos.json"))
         else:
             bench_fleet.run(json_path=jp("BENCH_fleet.json"))
     if "kernels" in sections:

@@ -25,6 +25,8 @@ from repro.core.partitioner import PartitionPlan, dp_partition, incremental_repa
 from repro.core.profiler import RuntimeEnergyProfiler
 from repro.core.simulator import DeviceSim
 from repro.core.telemetry import EnergyBreakdown
+from repro.faults.errors import FaultError, TransientOpFault
+from repro.faults.recovery import pinned_partition, surviving_alpha
 
 
 @dataclass
@@ -59,15 +61,28 @@ class TaskStats:
 class AdaOperController:
     def __init__(self, sim: DeviceSim, profiler: RuntimeEnergyProfiler,
                  objective: str = "edp", drift_threshold: float = 0.35,
-                 replan_period: int = 16, segment_halo: int = 2):
+                 replan_period: int = 16, segment_halo: int = 2,
+                 max_op_retries: int = 3):
         self.sim = sim
         self.profiler = profiler
         self.objective = objective
         self.drift_threshold = drift_threshold
         self.replan_period = replan_period
         self.segment_halo = segment_halo
+        self.max_op_retries = max_op_retries
         self.plans: Dict[str, PartitionPlan] = {}
         self.stats: Dict[str, TaskStats] = {}
+        self._fault_epoch_seen = getattr(sim, "fault_epoch", 0)
+
+    def _check_fault_epoch(self) -> None:
+        """Invalidate every cached plan when the device's fault state moved
+        (a rail dropped OR recovered): stale plans would either dispatch
+        onto a dead rail or keep limping on the survivor after restoration.
+        The next inference replans automatically."""
+        epoch = self.sim.fault_epoch
+        if epoch != self._fault_epoch_seen:
+            self._fault_epoch_seen = epoch
+            self.plans.clear()
 
     def _cost_fn(self, obs_state):
         # the profiler cost callable carries its CostTableCache, so periodic
@@ -82,7 +97,14 @@ class AdaOperController:
 
     def plan(self, graph: OpGraph) -> PartitionPlan:
         obs = self.sim.observe()
-        plan = dp_partition(graph, self._cost_fn(obs), objective=self.objective)
+        pinned = surviving_alpha(self.sim)  # raises when no rail survives
+        if pinned is None:
+            plan = dp_partition(graph, self._cost_fn(obs), objective=self.objective)
+        else:
+            # processor fallback (Parallax-style): a rail is faulted, so the
+            # DP collapses — pin every op to the surviving class
+            plan = pinned_partition(graph, self._cost_fn(obs), pinned)
+            self.sim.ledger.count("fault_replans")
         self.plans[graph.name] = plan
         self.stats.setdefault(graph.name, TaskStats()).repartitions += 1
         self.sim.ledger.count("repartitions")
@@ -99,6 +121,7 @@ class AdaOperController:
         """``run_inference`` with the ground-truth energy split per rail.
         Appends one ``infer`` StepEvent to the device ledger — the record
         every downstream aggregate (fleet report, benchmarks) folds."""
+        self._check_fault_epoch()
         if graph.name not in self.plans:
             self.plan(graph)
         plan = self.plans[graph.name]
@@ -108,8 +131,20 @@ class AdaOperController:
         eb = EnergyBreakdown()
         prev = plan.alphas[0]
         items, lats, ens = [], [], []
+        retried = 0
         for i, (op, a) in enumerate(zip(graph.nodes, plan.alphas)):
-            l, op_eb = self.sim.exec_op_rails(op, float(a), float(prev))
+            # bounded retry on injected transient op failures; a
+            # ProcessorFault propagates (the plan should have been pinned —
+            # run_trace turns it into an explicit rejected record)
+            for attempt in range(self.max_op_retries + 1):
+                try:
+                    l, op_eb = self.sim.exec_op_rails(op, float(a), float(prev))
+                    break
+                except TransientOpFault:
+                    if attempt == self.max_op_retries:
+                        raise
+                    retried += 1
+                    self.sim.ledger.count("op_retries")
             e = op_eb.total_j
             items.append((op, float(a), float(prev)))
             lats.append(l)
@@ -119,6 +154,14 @@ class AdaOperController:
             eb += op_eb
             prev = a
             self.sim.step(l)
+        if retried:
+            # the transient fault's matching recovery record (its injector
+            # event arms a failure budget instead of opening a window)
+            self.sim.ledger.count("recoveries")
+            self.sim.ledger.emit(
+                "recovery", 0.0, EnergyBreakdown(), t_s=self.sim.now_s,
+                model=graph.name,
+                meta={"fault": "transient_op", "retries": retried})
         drifts = self.profiler.feedback_batch(items, obs, lats, ens)
         drifted = [i for i, d in enumerate(drifts) if d > self.drift_threshold]
         stats.latencies.append(lat)
@@ -126,7 +169,12 @@ class AdaOperController:
         if drifted:
             stats.drift_events += 1
             self.sim.ledger.count("drift_events")
-        # incremental re-partition of drifted segments (merged + halo)
+        # incremental re-partition of drifted segments (merged + halo);
+        # pointless while a rail is down — the plan is pinned to the
+        # survivor and any segment re-solve could wander back onto the
+        # faulted class
+        if drifted and self.sim.faulted_rails:
+            drifted = []
         if drifted:
             obs2 = self.sim.observe()
             segs = self._merge_segments(drifted, len(graph))
@@ -186,12 +234,28 @@ class AdaOperController:
             if not pending and items[i][0] > t:
                 self.sim.advance_idle(items[i][0] - t)
                 t = items[i][0]
+            # scheduled fault/recovery boundaries up to the current virtual
+            # time take effect before the next request is served (no-op
+            # without an attached injector)
+            self.sim.advance_faults(t)
             while i < len(items) and items[i][0] <= t + 1e-12:
                 t_arr, k, g, prio, meta = items[i]
                 heapq.heappush(pending, (-prio, t_arr, k, g, meta))
                 i += 1
             _, t_arr, _, g, meta = heapq.heappop(pending)
-            lat, en, eb = self.run_inference_rails(g)
+            try:
+                lat, en, eb = self.run_inference_rails(g)
+            except FaultError as exc:
+                # unservable under the current fault state (no surviving
+                # rail / transient budget outlasted the retries): explicit
+                # rejected record, never a silent drop or a replay abort
+                self.sim.ledger.count("aborted")
+                self.sim.ledger.emit(
+                    "rejected", 0.0, EnergyBreakdown(), t_s=t,
+                    model=getattr(meta, "model", g.name),
+                    uid=getattr(meta, "uid", None),
+                    meta={"reason": str(exc), "arrival": meta})
+                continue
             self.sim.drain(en)
             out.append(ArrivalRecord(t_arr, t, t + lat, t + lat - t_arr, en, meta))
             # the per-request accounting stream the fleet report folds:

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.opgraph import OpGraph, OpNode
 from repro.core.telemetry import EnergyBreakdown, EnergyLedger
+from repro.faults.errors import ProcessorFault, TransientOpFault
 
 
 @dataclass(frozen=True)
@@ -113,6 +114,20 @@ class DeviceSim:
         # engine's concurrent pools: the staging bus is time-shared and the
         # co-runners show up as extra background load + heat.
         self.coexec = 1
+        # ----- fault-injection state (repro.faults). All defaults are
+        # inert: with no injector attached, every code path below is
+        # bit-identical to the pre-fault simulator (no extra RNG draws, no
+        # arithmetic changes) — asserted by the baseline gates. -----
+        self.faults = None  # attached FaultInjector, if any
+        self.fault_epoch = 0  # bumps on every fault/recovery transition
+        self.faulted_rails: frozenset = frozenset()  # {"cpu","gpu"} subsets
+        self.freq_cap = None  # (cpu_ghz, gpu_ghz) hard throttle cap
+        self.lat_inflation = 1.0  # mem-pressure latency multiplier
+        self.battery_critical = False  # serving engine sheds low-priority
+        self.transient_fails = 0  # armed one-shot per-op failures
+        self.battery_dead = False
+        self.battery_dead_t_s = None  # virtual time-of-death, if it died
+        self.now_s = 0.0  # last virtual timestamp seen (replay drivers set)
 
     def set_coexec(self, n: int) -> None:
         """Declare ``n`` concurrently-active model workers (>=1)."""
@@ -129,13 +144,35 @@ class DeviceSim:
         return 100.0 * self.battery_j / self.battery_capacity_j
 
     def drain(self, energy_j: float) -> None:
-        """Charge ``energy_j`` joules against the battery (no-op without one)."""
-        if self.battery_j is not None:
-            self.battery_j = max(0.0, self.battery_j - float(energy_j))
+        """Charge ``energy_j`` joules against the battery (no-op without
+        one). The battery clamps at 0 and flips ``battery_dead`` — a dead
+        device keeps simulating (the replay reports time-to-empty) but the
+        serving engine treats it as permanently ``battery_critical``."""
+        if self.battery_j is None:
+            return
+        self.battery_j = max(0.0, self.battery_j - float(energy_j))
+        if self.battery_j <= 0.0 and not self.battery_dead:
+            self.battery_dead = True
+            self.battery_critical = True
+            self.battery_dead_t_s = self.now_s
+            self.ledger.count("battery_dead")
+            self.ledger.emit("battery_dead", 0.0, EnergyBreakdown(),
+                             t_s=self.now_s)
 
     def idle_power_w(self) -> float:
         """Leakage floor with both processor classes idle."""
         return self.cpu_spec.p_idle_w + self.gpu_spec.p_idle_w
+
+    # ----- fault hooks (repro.faults) -----
+    def advance_faults(self, t_s: float) -> int:
+        """Move the virtual clock to ``t_s`` and let an attached
+        :class:`~repro.faults.injector.FaultInjector` apply every scheduled
+        fault/recovery boundary crossed. Returns the number of transitions
+        (0, trivially, with no injector attached)."""
+        self.now_s = float(t_s)
+        if self.faults is None:
+            return 0
+        return self.faults.advance_to(self.now_s)
 
     def advance_idle(self, dt_s: float, max_steps: int = 20) -> None:
         """Idle the device for ``dt_s``: dynamics relax toward the preset
@@ -168,6 +205,11 @@ class DeviceSim:
         s.gpu_f += 0.2 * (p["gpu_f"] - s.gpu_f) + vol * r.normal() * 0.08
         s.cpu_f = float(np.clip(s.cpu_f, self.cpu_spec.f_min_ghz, self.cpu_spec.f_max_ghz))
         s.gpu_f = float(np.clip(s.gpu_f, self.gpu_spec.f_min_ghz, self.gpu_spec.f_max_ghz))
+        # injected thermal-throttle spike: a hard governor ceiling on top of
+        # the spec clamp (inert when no throttle window is active)
+        if self.freq_cap is not None:
+            s.cpu_f = min(s.cpu_f, self.freq_cap[0])
+            s.gpu_f = min(s.gpu_f, self.freq_cap[1])
         # bursty background load (2-state markov modulated). Bursts land
         # mostly on the CPU — that's where co-running app threads live.
         if r.random() < 0.10:
@@ -214,15 +256,35 @@ class DeviceSim:
         return lat, eb.total_j
 
     def exec_op_rails(self, op: OpNode, alpha: float, prev_alpha: float,
-                      state: DeviceState = None
+                      state: DeviceState = None, attribution: bool = False
                       ) -> Tuple[float, EnergyBreakdown]:
         """``exec_op`` with the energy attributed per power rail (CPU class,
         GPU class, transfer bus). ``total_j`` is computed in the historical
         summation order, so it is bit-identical to what ``exec_op`` always
         returned; the rails sum to it up to float associativity (asserted in
         ``tests/test_telemetry.py``). Pure in the device dynamics: no RNG
-        draw, no state mutation — safe to call for attribution-only
-        purposes (``rail_fractions``)."""
+        draw, no state mutation — callers computing attribution only (not
+        executing) pass ``attribution=True`` so injected faults neither
+        fire nor drain their one-shot budgets.
+
+        Raises :class:`~repro.faults.errors.ProcessorFault` when any op
+        fraction lands on a faulted rail, and
+        :class:`~repro.faults.errors.TransientOpFault` while the injector's
+        armed transient-failure budget drains (execution paths only)."""
+        if not attribution and (self.faulted_rails or self.transient_fails):
+            if alpha > 0.0 and "gpu" in self.faulted_rails:
+                raise ProcessorFault(
+                    f"op {op.name!r}: alpha={alpha:g} dispatched onto "
+                    "faulted gpu rail")
+            if alpha < 1.0 and "cpu" in self.faulted_rails:
+                raise ProcessorFault(
+                    f"op {op.name!r}: alpha={alpha:g} leaves "
+                    f"{1.0 - alpha:g} on faulted cpu rail")
+            if self.transient_fails > 0:
+                self.transient_fails -= 1
+                raise TransientOpFault(
+                    f"op {op.name!r}: transient execution failure "
+                    f"({self.transient_fails} armed failures remain)")
         s = state or self.state
         # concurrent model workers: co-runners act as extra background load on
         # both processor classes, and the CPU<->GPU staging bus is time-shared
@@ -252,6 +314,11 @@ class DeviceSim:
         # temperature; invisible to the monitor (see __init__)
         k = 1.0 + 0.35 * self._therm
         lat *= 1.0 + 0.20 * self._therm
+        # injected memory pressure inflates latency, invisibly to the
+        # monitor (like the thermal state). Guarded so the arithmetic is
+        # untouched — bit-identical — when no mem_pressure window is active.
+        if self.lat_inflation != 1.0:
+            lat *= self.lat_inflation
         # total in the pre-refactor order ((gpu + cpu) + bus) * k: bit-equal
         # to the scalar exec_op of every previous revision
         return lat, EnergyBreakdown(cpu_j=e_cpu * k, gpu_j=e_gpu * k,
@@ -270,7 +337,8 @@ class DeviceSim:
         eb = EnergyBreakdown()
         prev = plan[0] if len(plan) else 1.0
         for op, a in zip(graph.nodes, plan):
-            _, e = self.exec_op_rails(op, float(a), float(prev), s)
+            _, e = self.exec_op_rails(op, float(a), float(prev), s,
+                                      attribution=True)
             eb += e
             prev = a
         return eb.fractions()

@@ -1,0 +1,18 @@
+"""Fault injection + graceful degradation (see docs/robustness.md).
+
+Typed, seedable fault schedules (:mod:`repro.faults.plan`), an injector that
+drives them against ``DeviceSim``'s virtual clock (:mod:`.injector`),
+processor-fallback replanning (:mod:`.recovery`), and the exception leaf the
+simulator raises from its execution path (:mod:`.errors`).
+"""
+from repro.faults.errors import FaultError, ProcessorFault, TransientOpFault
+from repro.faults.injector import FaultInjector
+from repro.faults.plan import (CHAOS_SCENARIOS, KINDS, FaultEvent, FaultPlan,
+                               chaos_plan)
+from repro.faults.recovery import pinned_partition, surviving_alpha
+
+__all__ = [
+    "CHAOS_SCENARIOS", "KINDS", "FaultError", "FaultEvent", "FaultInjector",
+    "FaultPlan", "ProcessorFault", "TransientOpFault", "chaos_plan",
+    "pinned_partition", "surviving_alpha",
+]

@@ -31,6 +31,8 @@ import numpy as np
 from repro.core.controller import AdaOperController
 from repro.core.opgraph import OpGraph, build_transformer_graph, build_yolo_graph
 from repro.core.profiler import RuntimeEnergyProfiler
+from repro.core.telemetry import EnergyBreakdown
+from repro.faults import FaultError, FaultInjector, FaultPlan, chaos_plan
 from repro.fleet.population import DeviceProfile
 from repro.fleet.report import DeviceMetrics, FleetReport, RequestRecord
 from repro.fleet.workloads import ASSISTANT, Trace, make_trace
@@ -38,6 +40,13 @@ from repro.fleet.workloads import ASSISTANT, Trace, make_trace
 # trace seeds are decorrelated across devices with a fixed stride (prime, so
 # device k's stream never aliases device 0's at small fleet seeds)
 _DEVICE_SEED_STRIDE = 7919
+
+# graceful-degradation counters surfaced in fleet reports when nonzero
+# (kept out of the schema when zero so pre-chaos baselines stay identical)
+_ROBUST_COUNTER_KEYS = ("faults", "recoveries", "fault_replans", "op_retries",
+                        "aborted", "shed", "deadline_requeues",
+                        "deadline_misses", "deadline_evictions",
+                        "battery_dead")
 
 
 def _require_models(trace: Trace, known, backend: str) -> None:
@@ -48,12 +57,16 @@ def _require_models(trace: Trace, known, backend: str) -> None:
     missing = {r.model for r in trace} - set(known)
     if not missing:
         return
+    uids = {m: [r.uid for r in trace if r.model == m] for m in sorted(missing)}
+    detail = "; ".join(
+        f"{m!r} (request uids {u[:8]}{' ...' if len(u) > 8 else ''}, "
+        f"{len(u)} total)" for m, u in uids.items())
     if backend == "graph":
-        raise ValueError(f"trace references unknown models {sorted(missing)}")
+        raise ValueError(f"trace references unknown models: {detail}")
     raise ValueError(
         f"serving backend has neither a serving worker nor an operator "
-        f"graph for {sorted(missing)}; register the model in "
-        f"serving_models or the graph registry")
+        f"graph for: {detail}; register the model in serving_models or "
+        f"the graph registry")
 
 
 def default_graph_registry() -> Dict[str, OpGraph]:
@@ -80,12 +93,16 @@ class DeviceReplay:
                  calib_samples: int = 350, use_gru: bool = False,
                  objective: str = "edp", backend: str = "graph",
                  serving_models: Optional[Dict[str, tuple]] = None,
-                 max_slots: int = 4):
+                 max_slots: int = 4, fault_plan: Optional[FaultPlan] = None):
         if backend not in ("graph", "serving"):
-            raise ValueError(f"unknown replay backend {backend!r}")
+            raise ValueError(f"unknown replay backend {backend!r}; choose "
+                             "from ('graph', 'serving')")
         self.profile = profile
         self.graphs = graphs
         self.backend = backend
+        # explicit fault schedule; chaos_* scenario traces derive one from
+        # (scenario, duration, trace seed) at run() when this is None
+        self.fault_plan = fault_plan
         self.sim = profile.make_sim()
         self.profiler = RuntimeEnergyProfiler(use_gru=use_gru,
                                               seed=profile.seed)
@@ -107,6 +124,14 @@ class DeviceReplay:
 
     def run(self, trace: Trace) -> Tuple[List[RequestRecord], Dict[str, int]]:
         b0 = self.sim.battery_pct
+        # chaos scenarios replay under their seeded fault schedule; other
+        # scenarios (chaos_plan -> None) attach nothing and stay inert
+        plan = self.fault_plan
+        if plan is None:
+            plan = chaos_plan(trace.scenario, trace.duration_s,
+                              seed=trace.seed)
+        if plan is not None and self.sim.faults is None:
+            FaultInjector(self.sim, plan)
         # the ledger is cumulative over the device's life; fold only this
         # run's window so back-to-back runs stay independent
         mark = len(self.sim.ledger.events)
@@ -123,7 +148,8 @@ class DeviceReplay:
     def metrics(self, records, counters) -> DeviceMetrics:
         return DeviceMetrics.from_records(
             self.profile.name, self.profile.tier, records,
-            self.battery_start_pct, self.battery_end_pct, counters)
+            self.battery_start_pct, self.battery_end_pct, counters,
+            time_to_empty_s=self.sim.battery_dead_t_s)
 
     def _records_from_ledger(self, trace: Trace,
                              mark: int = 0) -> List[RequestRecord]:
@@ -160,9 +186,11 @@ class DeviceReplay:
         finally:
             self.sim.set_coexec(prev)
         c = self._ledger_counter_delta()
-        return {"repartitions": c.get("repartitions", 0),
-                "incremental": c.get("incremental", 0),
-                "drift_events": c.get("drift_events", 0)}
+        out = {"repartitions": c.get("repartitions", 0),
+               "incremental": c.get("incremental", 0),
+               "drift_events": c.get("drift_events", 0)}
+        out.update(self._robust_counters(c))
+        return out
 
     def _ledger_counter_delta(self) -> Dict[str, int]:
         """This run's raw ledger counters (cumulative minus the snapshot
@@ -171,6 +199,13 @@ class DeviceReplay:
         return {k: v - base.get(k, 0)
                 for k, v in self.sim.ledger.counters.items()}
 
+    @staticmethod
+    def _robust_counters(c: Dict[str, int]) -> Dict[str, int]:
+        """Nonzero graceful-degradation counters (fault/recovery, shed,
+        deadline machinery). Zero counters are omitted so non-chaos runs
+        keep the pre-chaos report schema byte-for-byte."""
+        return {k: c[k] for k in _ROBUST_COUNTER_KEYS if c.get(k)}
+
     def _llm_request(self, trace: Trace, r):
         """Deterministic synthetic prompt for one LLM trace request."""
         from repro.serving.engine import Request
@@ -178,7 +213,9 @@ class DeviceReplay:
         vocab = self.engine.workers[r.model].cfg.vocab_size
         rng = np.random.default_rng([trace.seed, r.uid])
         prompt = rng.integers(1, vocab, max(r.prompt_len, 1), dtype=np.int32)
-        return Request(r.uid, prompt, max_new_tokens=max(r.max_new_tokens, 1))
+        return Request(r.uid, prompt, max_new_tokens=max(r.max_new_tokens, 1),
+                       priority=r.priority,
+                       deadline_s=getattr(r, "deadline_s", None))
 
     def _serving_counters(self) -> Dict[str, int]:
         """Fleet counter schema from the shared ledger. The engine counts
@@ -188,10 +225,12 @@ class DeviceReplay:
         counter, not as records — a NaN energy must not poison the fleet
         aggregates or count toward SLO attainment."""
         c = self._ledger_counter_delta()
-        return {"drift_events": c.get("engine_drift_events", 0),
-                "preemptions": c.get("preemptions", 0),
-                "admission_denials": c.get("admission_denials", 0),
-                "rejected": c.get("rejected", 0)}
+        out = {"drift_events": c.get("engine_drift_events", 0),
+               "preemptions": c.get("preemptions", 0),
+               "admission_denials": c.get("admission_denials", 0),
+               "rejected": c.get("rejected", 0)}
+        out.update(self._robust_counters(c))
+        return out
 
     def _run_serving(self, trace: Trace) -> Dict[str, int]:
         known = set(self.engine.workers) | set(self.graphs)
@@ -222,6 +261,7 @@ class DeviceReplay:
         eng._vtime = 0.0
         try:
             while True:
+                sim.advance_faults(t)
                 while i < len(items) and items[i].t_arrival_s <= t + 1e-12:
                     r = items[i]
                     if r.model in eng.workers:
@@ -245,15 +285,25 @@ class DeviceReplay:
                     _, t_arr, uid = heapq.heappop(frames)
                     r = by_uid[uid]
                     sim.set_coexec(n_resident)
-                    lat, en, eb = self.controller.run_inference_rails(
-                        self.graphs[r.model])
-                    sim.drain(en)
-                    t += lat
-                    eng._vtime = t
-                    # the frame's per-request event (the engine appends its
-                    # own at retirement) — latency is completion - arrival
-                    sim.ledger.emit("request", t - t_arr, eb, t_s=t_arr,
-                                    model=r.model, uid=uid)
+                    try:
+                        lat, en, eb = self.controller.run_inference_rails(
+                            self.graphs[r.model])
+                    except FaultError as exc:
+                        # unservable under the current fault state: an
+                        # explicit rejected record, never a replay abort
+                        sim.ledger.count("aborted")
+                        sim.ledger.emit("rejected", 0.0, EnergyBreakdown(),
+                                        t_s=t, model=r.model, uid=uid,
+                                        meta={"reason": str(exc)})
+                    else:
+                        sim.drain(en)
+                        t += lat
+                        eng._vtime = t
+                        # the frame's per-request event (the engine appends
+                        # its own at retirement) — latency is completion -
+                        # arrival
+                        sim.ledger.emit("request", t - t_arr, eb, t_s=t_arr,
+                                        model=r.model, uid=uid)
                     busy = [m for m in eng.workers if eng._busy(m)]
                 if busy:
                     eng._serve_round(busy, responses)

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -64,12 +64,18 @@ class DeviceMetrics:
     # per-processor attribution of energy_j (cpu/gpu/bus), folded from the
     # same ledger-derived records as the total
     energy_rails_j: Dict[str, float] = field(default_factory=dict)
+    # virtual time (s) at which the device's battery hit 0 mid-replay
+    # (None = survived): the fleet-health number behind drained-device SLO
+    # loss; ``DeviceSim.battery_dead_t_s`` via the replay harness
+    time_to_empty_s: Optional[float] = None
 
     @classmethod
     def from_records(cls, device: str, tier: str,
                      records: Sequence[RequestRecord],
                      battery_start_pct: float, battery_end_pct: float,
-                     counters: Dict[str, int] = None) -> "DeviceMetrics":
+                     counters: Dict[str, int] = None,
+                     time_to_empty_s: Optional[float] = None
+                     ) -> "DeviceMetrics":
         n = len(records)
         energy = float(sum(r.energy_j for r in records))
         met = sum(1 for r in records if r.slo_met)
@@ -86,6 +92,7 @@ class DeviceMetrics:
                 "cpu": float(sum(r.energy_cpu_j for r in records)),
                 "gpu": float(sum(r.energy_gpu_j for r in records)),
                 "bus": float(sum(r.energy_bus_j for r in records))},
+            time_to_empty_s=time_to_empty_s,
         )
 
 

@@ -12,6 +12,11 @@ real mobile deployments ("Smart at what cost?" characterisation):
     tight SLO, plus periodic detector keyframes.
   * ``mixed``  — diurnal mixture: all three families thinned by a
     day-curve mapped onto the trace duration.
+  * ``chaos_voice`` / ``chaos_mixed`` — the chaos-testing variants: the
+    same request families with per-request deadlines and a low-priority
+    background tier, replayed under the matching injected-fault schedule
+    (``repro.faults.plan.chaos_plan``) so shedding, deadline requeues and
+    processor fallback all exercise (docs/robustness.md).
 
 The same ``(scenario, duration, seed)`` always yields byte-identical traces
 (``tests/test_fleet.py``); the fleet replay harness derives one trace per
@@ -19,8 +24,9 @@ device from the fleet seed.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -45,6 +51,9 @@ class TraceRequest:
     # LLM-style requests (serving backend); 0/0 for vision frames
     prompt_len: int = 0
     max_new_tokens: int = 0
+    # hard completion deadline relative to arrival (chaos scenarios): the
+    # serving engine requeues-with-backoff then errors; None = no deadline
+    deadline_s: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -165,11 +174,56 @@ def mixed_diurnal(duration_s: float = 30.0, seed: int = 0,
     return _finish("mixed", seed, duration_s, reqs)
 
 
+ASSISTANT_DEADLINE_S = 6 * ASSISTANT_SLO_S  # ~p95 headroom over the SLO
+
+
+def chaos_voice(duration_s: float = 30.0, seed: int = 0,
+                rate_scale: float = 1.0) -> Trace:
+    """The chaos-testing voice workload: denser assistant sessions with
+    per-request deadlines, plus a priority-0 background tier (prefetch /
+    summarisation jobs) that exists to be shed under ``battery_critical``.
+    Priorities: 2 = the session's opening utterance (interactive), 1 =
+    follow-ups, 0 = background. Replayed under the ``chaos_voice`` fault
+    schedule by ``repro.fleet.replay``."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Tuple] = []
+    for t0 in _poisson_times(rng, 0.5 * rate_scale, duration_s):
+        n_utter = 1 + int(rng.geometric(0.5))
+        t = t0
+        for j in range(n_utter):
+            if t >= duration_s:
+                break
+            reqs.append((t, ASSISTANT, ASSISTANT_SLO_S, 2 if j == 0 else 1,
+                         int(rng.integers(8, 24)), int(2 + rng.integers(0, 6)),
+                         ASSISTANT_DEADLINE_S))
+            t += float(rng.exponential(1.0))
+    for t in _poisson_times(rng, 0.4 * rate_scale, duration_s):
+        reqs.append((t, ASSISTANT, ASSISTANT_SLO_S, 0,
+                     int(rng.integers(16, 48)), int(4 + rng.integers(0, 6)),
+                     2 * ASSISTANT_DEADLINE_S))
+    return _finish("chaos_voice", seed, duration_s, reqs)
+
+
+def chaos_mixed(duration_s: float = 30.0, seed: int = 0,
+                rate_scale: float = 1.0) -> Trace:
+    """``mixed_diurnal`` with a completion deadline stamped on every
+    request (6x its SLO) — identical arrivals/RNG stream, replayed under
+    the ``chaos_mixed`` fault schedule (which includes transient op
+    failures on the vision/graph path)."""
+    base = mixed_diurnal(duration_s=duration_s, seed=seed,
+                         rate_scale=rate_scale)
+    reqs = tuple(dataclasses.replace(r, deadline_s=6 * r.slo_s)
+                 for r in base.requests)
+    return Trace("chaos_mixed", seed, duration_s, reqs)
+
+
 SCENARIOS = {
     "voice": voice_assistant,
     "video": video_analytics,
     "ar": camera_ar,
     "mixed": mixed_diurnal,
+    "chaos_voice": chaos_voice,
+    "chaos_mixed": chaos_mixed,
 }
 
 

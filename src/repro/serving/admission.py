@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.telemetry import EnergyBreakdown
+from repro.serving.robustness import reject_request
 from repro.serving.scheduler import AdaOperScheduler
 from repro.serving.slots import Request, Response, _ActiveSeq, _SlotPool
 from repro.serving.workers import ModelWorker
@@ -102,13 +103,7 @@ def admit_requests(eng, model: str, pool: _SlotPool, out: List[Response],
             q.pop(0)
             eng.admission._record(False, f"invalid: {err}",
                                   len(pool.active), req.uid)
-            eng.ledger.count("rejected")
-            eng.ledger.emit("rejected", eng._now() - req.t_submit,
-                            EnergyBreakdown(), model=model, uid=req.uid,
-                            meta={"error": err})
-            out.append(Response(req.uid, np.zeros(0, np.int32),
-                                eng._now() - req.t_submit, float("nan"),
-                                error=err))
+            reject_request(eng, model, req, err, out)
             continue
         seq_len, max_new = eng._plan_shape(pool, extra=req)
         plan_fn = (None if eng.scheduler is None else
@@ -177,10 +172,9 @@ def prefill_group(eng, model: str, pool: _SlotPool,
             EnergyBreakdown.from_total(pp["energy"] * G / pp["batch"],
                                        pp["rails"]),
             t_s=eng._now(), model=model, n_active=G)
-        if eng._vtime is not None:
-            # virtual replay charges the whole bucket at the planner's
-            # predicted latency (wall-clock mode measures it)
-            eng._vtime += pp["latency"]
+        # virtual replay charges the whole bucket at the planner's
+        # predicted latency (wall-clock mode measures it)
+        eng._advance_vtime(pp["latency"])
     for seq, tok in zip(group, toks):
         seq.tokens.append(tok)
         if pp is not None:

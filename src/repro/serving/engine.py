@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.telemetry import EnergyBreakdown, EnergyLedger
-from repro.serving import admission as adm, planning, sampling
+from repro.serving import admission as adm, planning, robustness, sampling
 from repro.serving.admission import AdmissionPolicy  # noqa: F401  (re-export)
 from repro.serving.bucketed import step_bucketed
 from repro.serving.sampling import _sample_rows  # noqa: F401  (re-export)
@@ -50,9 +50,11 @@ class ServingEngine:
     def __init__(self, scheduler: Optional[AdaOperScheduler] = None,
                  mode: str = "continuous", max_slots: int = 8,
                  slo_s: Optional[float] = None, sampling_seed: int = 0,
-                 batch_prefill: bool = True):
+                 batch_prefill: bool = True, max_retries: int = 1,
+                 deadline_backoff: float = 1.5, shed_below_priority: int = 1):
         if mode not in ("continuous", "bucketed"):
-            raise ValueError(f"unknown serving mode {mode!r}")
+            raise ValueError(f"unknown serving mode {mode!r}; choose from "
+                             "('continuous', 'bucketed')")
         self.workers: Dict[str, ModelWorker] = {}
         self.queues: Dict[str, List[Request]] = {}
         self.scheduler = scheduler
@@ -80,6 +82,13 @@ class ServingEngine:
         # drift-scoped step-plan memo (see repro.serving.planning)
         self._plan_memo: Dict = {}
         self._drift_ref = None
+        # graceful degradation (repro.serving.robustness): deadline timeout
+        # -> up to max_retries requeues with deadline * backoff, then an
+        # explicit error Response; under battery_critical, queued requests
+        # with priority below the floor are shed (also explicit errors)
+        self.max_retries = max_retries
+        self.deadline_backoff = deadline_backoff
+        self.shed_below_priority = shed_below_priority
         # virtual clock for trace-driven replay (run_trace): None => wall
         # time; a float => waits read it and every planned prefill/decode
         # step advances it by the predicted latency
@@ -87,6 +96,14 @@ class ServingEngine:
 
     def _now(self) -> float:
         return self._vtime if self._vtime is not None else time.time()
+
+    def _advance_vtime(self, dt: float) -> None:
+        """Advance the virtual clock (no-op in wall mode) and mirror it to
+        the simulator so fault timestamps line up with the replay."""
+        if self._vtime is not None:
+            self._vtime += dt
+            if self.scheduler is not None:
+                self.scheduler.sim.now_s = self._vtime
 
     # ---- sampling delegates (logic in repro.serving.sampling) ----
 
@@ -204,6 +221,9 @@ class ServingEngine:
             self._drift_event()  # direct drivers still invalidate stale plans
         pool = self._pool(model)
         out: List[Response] = []
+        # degradation pass first: expired deadlines requeue/error and
+        # battery-critical shedding frees queue space before admission
+        robustness.expire_and_shed(self, model, pool, out)
         # virtual clock: iterations are timed in _vtime deltas (predicted
         # latencies), not host speed; wall mode measures wall time
         t0 = self._now()
@@ -228,8 +248,7 @@ class ServingEngine:
                     EnergyBreakdown.from_total(
                         step_energy * n_active / sp["batch"], sp["rails"]),
                     t_s=t0, model=model, n_active=n_active)
-                if self._vtime is not None:
-                    self._vtime += sp["step_latency"]
+                self._advance_vtime(sp["step_latency"])
             seqs = list(pool.active.values())
             if temperature > 0.0:
                 # gather active rows on device: the host only ever sees the
@@ -329,6 +348,9 @@ class ServingEngine:
         i = 0
         try:
             while True:
+                # fault/recovery boundaries scheduled up to now take effect
+                # before this round (no-op without an attached injector)
+                sim.advance_faults(self._vtime)
                 while i < len(items) and items[i][0] <= self._vtime + 1e-12:
                     t_arr, model, req = items[i]
                     req.t_submit = t_arr

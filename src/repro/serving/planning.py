@@ -48,12 +48,14 @@ def drift_event(eng) -> bool:
     sch = eng.scheduler
     obs = sch.sim.observe()
     ver = sch.profiler.correction_version()
+    epoch = getattr(sch.sim, "fault_epoch", 0)
     ref = eng._drift_ref
-    eng._drift_ref = (obs, ver)
+    eng._drift_ref = (obs, ver, epoch)
     if ref is None:
         return False
-    robs, rver = ref
+    robs, rver, repoch = ref
     event = (ver != rver
+             or epoch != repoch
              or abs(obs.cpu_f - robs.cpu_f) > DRIFT_CPU_F
              or abs(obs.gpu_f - robs.gpu_f) > DRIFT_GPU_F
              or abs(obs.cpu_bg - robs.cpu_bg) > DRIFT_BG

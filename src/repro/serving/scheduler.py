@@ -17,6 +17,7 @@ from typing import List, Optional, Tuple
 from repro.core.opgraph import build_transformer_graph
 from repro.core.partitioner import dp_partition
 from repro.core.profiler import state_bucket
+from repro.faults.recovery import pinned_partition, surviving_alpha
 
 
 def combine_rails(parts) -> Optional[Tuple[float, float, float]]:
@@ -62,6 +63,14 @@ class AdaOperScheduler:
         self._plan_cache: OrderedDict = OrderedDict()
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
+
+    def _cache_key(self, obs) -> tuple:
+        """Plan-cache scope: quantized device state, profiler correction
+        version, and the sim's fault epoch — every fault/recovery
+        transition shifts the epoch, so plans solved under a faulted rail
+        can never serve a healthy device (or vice versa)."""
+        return (state_bucket(obs), self.profiler.correction_version(),
+                getattr(self.sim, "fault_epoch", 0))
 
     @staticmethod
     def _len_bucket(n: int) -> int:
@@ -119,7 +128,14 @@ class AdaOperScheduler:
             return ent
         self.plan_cache_misses += 1
         g = self._graph(cfg, b, seq, kind)
-        ent = dp_partition(g, cost_fn, objective=self.objective)
+        pinned = (surviving_alpha(self.sim)
+                  if getattr(self.sim, "faulted_rails", None) else None)
+        if pinned is None:
+            ent = dp_partition(g, cost_fn, objective=self.objective)
+        else:
+            # processor fallback: a rail is down, pin every op to the
+            # survivor (cache-scoped to the fault epoch via cache_key)
+            ent = pinned_partition(g, cost_fn, pinned)
         ent.rail_fractions = (self.sim.rail_fractions(g, ent.alphas)
                               if hasattr(self.sim, "rail_fractions") else None)
         self._plan_cache[key] = ent
@@ -143,7 +159,7 @@ class AdaOperScheduler:
         traversals."""
         obs = self.sim.observe()
         cost_fn = self.profiler.cost_fn(obs)
-        cache_key = (state_bucket(obs), self.profiler.correction_version())
+        cache_key = self._cache_key(obs)
         b = self._new_bucket(batch)
         seq = self._len_bucket(seq_len) + self._new_bucket(max_new)
         plan_dec = self._plan_one(cfg, b, seq, "decode", cost_fn, cache_key)
@@ -156,7 +172,7 @@ class AdaOperScheduler:
         """Cached prefill plan for an admission (batch is pow2-bucketed)."""
         obs = self.sim.observe()
         cost_fn = self.profiler.cost_fn(obs)
-        cache_key = (state_bucket(obs), self.profiler.correction_version())
+        cache_key = self._cache_key(obs)
         b = self._new_bucket(batch)
         plan = self._plan_one(cfg, b, self._len_bucket(seq_len), "prefill",
                               cost_fn, cache_key)
@@ -166,7 +182,7 @@ class AdaOperScheduler:
     def choose(self, cfg, n_waiting: int, prompt_len: int, max_new: int):
         obs = self.sim.observe()
         cost_fn = self.profiler.cost_fn(obs)
-        cache_key = (state_bucket(obs), self.profiler.correction_version())
+        cache_key = self._cache_key(obs)
         plen = self._len_bucket(prompt_len)
         best = None
         for b in self._candidates_for(n_waiting):

@@ -22,6 +22,12 @@ class Request:
     max_new_tokens: int = 16
     enc_inputs: Optional[np.ndarray] = None
     t_submit: float = 0.0  # stamped by ServingEngine.submit
+    # graceful-degradation fields (repro.serving.robustness): priority
+    # orders battery-critical load shedding (lower sheds first); a deadline
+    # turns into timeout -> bounded requeue-with-backoff -> explicit error
+    priority: int = 0
+    deadline_s: Optional[float] = None  # relative to t_submit; None = none
+    retries: int = 0  # deadline requeues consumed so far
 
 
 @dataclass
