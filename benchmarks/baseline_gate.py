@@ -13,6 +13,36 @@ import os
 
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# fleet-baseline filename -> the bench_fleet flag that regenerates it; any
+# other BENCH_fleet_<scenario>.json derives --scenario-smoke-config <scenario>
+_FLEET_REGEN_FLAGS = {
+    "BENCH_fleet.json": "--smoke-config",
+    "BENCH_fleet_serving.json": "--serving-smoke-config",
+    "BENCH_fleet_chaos.json": "--chaos-smoke-config",
+}
+
+
+def fleet_regen_cmd(baseline_path: str) -> str:
+    """The exact ``bench_fleet`` invocation that rewrites ``baseline_path``.
+
+    Derived from the baseline *filename* — not from the failing run's
+    config — so the echoed recipe always regenerates the very file the gate
+    compared against (a scenario replay gated on the serving backend, or a
+    custom baseline path, used to print a recipe for a different file)."""
+    name = os.path.basename(baseline_path)
+    flag = _FLEET_REGEN_FLAGS.get(name)
+    if flag is None and name.startswith("BENCH_fleet_") and name.endswith(".json"):
+        scenario = name[len("BENCH_fleet_"):-len(".json")]
+        flag = f"--scenario-smoke-config {scenario}"
+    if flag is None:
+        flag = "--smoke-config"
+    path = os.path.abspath(baseline_path)
+    if path.startswith(_REPO_ROOT + os.sep):
+        path = os.path.relpath(path, _REPO_ROOT)
+    return ("PYTHONPATH=src python -m benchmarks.bench_fleet "
+            f"{flag} --json {path}")
 
 
 def load_baseline(path: str, regen_cmd: str) -> dict:
@@ -38,9 +68,9 @@ def load_baseline(path: str, regen_cmd: str) -> dict:
             f"Regenerate it with:\n    {regen_cmd}") from e
 
 
-def gate_fleet(out: dict, baseline_path: str, regen_cmd: str,
-               energy_tol: float, slo_tol: float, label: str = "fleet",
-               counter_keys: tuple = ()) -> None:
+def gate_fleet(out: dict, baseline_path: str, regen_cmd: str = None,
+               energy_tol: float = 0.25, slo_tol: float = 0.15,
+               label: str = "fleet", counter_keys: tuple = ()) -> None:
     """Shared fleet-replay gate for every fleet baseline (graph and serving
     backends alike): identical request count (the replay is deterministic),
     fleet energy/request within ``energy_tol`` (relative) and SLO attainment
@@ -50,7 +80,13 @@ def gate_fleet(out: dict, baseline_path: str, regen_cmd: str,
 
     Every check runs; all out-of-tolerance metrics are reported in one
     failure message, so a run that drifts on several axes is diagnosed in a
-    single CI round-trip instead of one assert per push."""
+    single CI round-trip instead of one assert per push.
+
+    ``regen_cmd`` defaults to :func:`fleet_regen_cmd` of ``baseline_path``
+    — the command that rewrites exactly the file this gate compared
+    against."""
+    if regen_cmd is None:
+        regen_cmd = fleet_regen_cmd(baseline_path)
     base = load_baseline(baseline_path, regen_cmd)
     cur_f, base_f = out["fleet"], base["fleet"]
     failures = []

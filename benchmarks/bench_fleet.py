@@ -59,24 +59,8 @@ SCENARIO_SMOKE = {
     "video": dict(devices=1, scenario="video", seed=1, duration=4.0,
                   calib=120),
 }
-REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet --smoke-config "
-             "--json benchmarks/baselines/BENCH_fleet.json")
-SERVING_REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet "
-                     "--serving-smoke-config "
-                     "--json benchmarks/baselines/BENCH_fleet_serving.json")
-CHAOS_REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_fleet "
-                   "--chaos-smoke-config "
-                   "--json benchmarks/baselines/BENCH_fleet_chaos.json")
-
-
 def scenario_baseline_path(scenario: str) -> str:
     return os.path.join(BASELINE_DIR, f"BENCH_fleet_{scenario}.json")
-
-
-def scenario_regen_cmd(scenario: str) -> str:
-    return ("PYTHONPATH=src python -m benchmarks.bench_fleet "
-            f"--scenario-smoke-config {scenario} "
-            f"--json benchmarks/baselines/BENCH_fleet_{scenario}.json")
 
 
 ENERGY_TOL = 0.25       # relative drift allowed on fleet energy/request
@@ -87,19 +71,12 @@ def gate(out: dict, baseline_path: str) -> None:
     cfg = out.get("config", {})
     backend = cfg.get("backend", "graph")
     scenario = cfg.get("scenario", "mixed")
-    counter_keys = ()
-    if scenario.startswith("chaos"):
-        # the fault schedule is deterministic in (scenario, duration, seed),
-        # so degraded-mode accounting must match the baseline exactly
-        regen = CHAOS_REGEN_CMD
-        counter_keys = CHAOS_COUNTER_KEYS
-    elif backend == "serving":
-        regen = SERVING_REGEN_CMD
-    elif scenario in SCENARIO_SMOKE:
-        regen = scenario_regen_cmd(scenario)
-    else:
-        regen = REGEN_CMD
-    gate_fleet(out, baseline_path, regen, ENERGY_TOL, SLO_TOL,
+    # the fault schedule is deterministic in (scenario, duration, seed),
+    # so degraded-mode accounting must match the baseline exactly
+    counter_keys = CHAOS_COUNTER_KEYS if scenario.startswith("chaos") else ()
+    # regen recipe is derived from the baseline *filename* inside gate_fleet
+    # (baseline_gate.fleet_regen_cmd) so it always names the gated file
+    gate_fleet(out, baseline_path, energy_tol=ENERGY_TOL, slo_tol=SLO_TOL,
                label=f"fleet[{backend}:{scenario}]",
                counter_keys=counter_keys)
 

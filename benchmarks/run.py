@@ -28,13 +28,13 @@ import argparse
 import os
 import time
 
-SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent", "fleet")
+SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent", "coexec", "fleet")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated sections (fig2,concurrent,"
+                    help="comma-separated sections (fig2,concurrent,coexec,"
                          "profiler,partitioner,kernels,roofline,fleet)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced fast-section run with loud fast-path asserts")
@@ -51,8 +51,8 @@ def main(argv=None) -> None:
                          f"got --only {args.only}")
     else:
         sections = set((args.only or
-                        "fig2,concurrent,profiler,partitioner,kernels,"
-                        "roofline,fleet")
+                        "fig2,concurrent,coexec,profiler,partitioner,"
+                        "kernels,roofline,fleet")
                        .split(","))
     t0 = time.time()
 
@@ -73,6 +73,11 @@ def main(argv=None) -> None:
         from benchmarks import bench_concurrent
         bench_concurrent.serving(json_path=jp("BENCH_concurrent.json"),
                                  smoke=args.smoke)
+    if "coexec" in sections:
+        banner("Co-execution: joint contention-aware vs independent planning")
+        from benchmarks import bench_concurrent
+        bench_concurrent.joint(json_path=jp("BENCH_coexec.json"),
+                               smoke=args.smoke)
     if "profiler" in sections:
         banner("Profiler accuracy + feature fast path")
         from benchmarks import bench_profiler

@@ -1,5 +1,13 @@
 """AdaOper core: runtime energy profiler + energy-aware operator partitioner."""
 from repro.core.baselines import codl_plan, mace_gpu_plan  # noqa: F401
+from repro.core.coexec import (  # noqa: F401
+    CoexecPlanner,
+    ContentionModel,
+    RailLoad,
+    joint_partition,
+    plan_rail_load,
+    predicted_rail_fractions,
+)
 from repro.core.controller import AdaOperController  # noqa: F401
 from repro.core.gbdt import GBDTRegressor  # noqa: F401
 from repro.core.gru import GRUCorrector  # noqa: F401
@@ -9,6 +17,7 @@ from repro.core.partitioner import (  # noqa: F401
     PartitionPlan,
     dp_partition,
     incremental_repartition,
+    score_plan,
 )
 from repro.core.profiler import (  # noqa: F401
     CostTableCache,

@@ -20,6 +20,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.core.coexec import CoexecPlanner, predicted_rail_fractions
 from repro.core.opgraph import OpGraph
 from repro.core.partitioner import PartitionPlan, dp_partition, incremental_repartition
 from repro.core.profiler import RuntimeEnergyProfiler
@@ -62,7 +63,8 @@ class AdaOperController:
     def __init__(self, sim: DeviceSim, profiler: RuntimeEnergyProfiler,
                  objective: str = "edp", drift_threshold: float = 0.35,
                  replan_period: int = 16, segment_halo: int = 2,
-                 max_op_retries: int = 3):
+                 max_op_retries: int = 3,
+                 coexec: "CoexecPlanner" = None):
         self.sim = sim
         self.profiler = profiler
         self.objective = objective
@@ -70,9 +72,20 @@ class AdaOperController:
         self.replan_period = replan_period
         self.segment_halo = segment_halo
         self.max_op_retries = max_op_retries
+        # contention-aware joint planner (repro.core.coexec): None (the
+        # default) keeps every planning path bit-identical to independent
+        # per-model planning
+        self.coexec = coexec
+        self._resident: Dict[str, OpGraph] = {}
         self.plans: Dict[str, PartitionPlan] = {}
         self.stats: Dict[str, TaskStats] = {}
         self._fault_epoch_seen = getattr(sim, "fault_epoch", 0)
+
+    def set_resident(self, graphs) -> None:
+        """Declare the concurrently-resident graph set for joint planning
+        (no-op for plan routing unless a ``coexec`` planner is attached and
+        at least two models are resident)."""
+        self._resident = {g.name: g for g in graphs}
 
     def _check_fault_epoch(self) -> None:
         """Invalidate every cached plan when the device's fault state moved
@@ -95,11 +108,26 @@ class AdaOperController:
         c = self.profiler.table_cache
         return {"hits": c.hits, "misses": c.misses, "entries": len(c)}
 
+    def _joint_active(self, graph: OpGraph) -> bool:
+        return (self.coexec is not None and len(self._resident) > 1
+                and graph.name in self._resident and self.sim.coexec > 1)
+
     def plan(self, graph: OpGraph) -> PartitionPlan:
         obs = self.sim.observe()
         pinned = surviving_alpha(self.sim)  # raises when no rail survives
         if pinned is None:
-            plan = dp_partition(graph, self._cost_fn(obs), objective=self.objective)
+            if self._joint_active(graph):
+                # joint co-execution plan: the whole resident set is solved
+                # together (cached in the CoexecPlanner; co-residents get
+                # their plan from the same solve at their next plan() call)
+                plan = self.coexec.plans(
+                    list(self._resident.values()), self._cost_fn(obs),
+                    n_resident=self.sim.coexec,
+                    fault_epoch=getattr(self.sim, "fault_epoch", 0),
+                )[graph.name]
+            else:
+                plan = dp_partition(graph, self._cost_fn(obs),
+                                    objective=self.objective)
         else:
             # processor fallback (Parallax-style): a rail is faulted, so the
             # DP collapses — pin every op to the surviving class
@@ -186,8 +214,22 @@ class AdaOperController:
                     lam=self._lam_estimate(new_plan))
                 stats.incremental += 1
                 self.sim.ledger.count("incremental")
+            if self._joint_active(graph):
+                # the incremental solve changed the alphas, so the joint
+                # plan's rail prediction is stale — re-stamp it, else the
+                # ledger feedback loop goes dark after the first drift
+                new_plan.coexec_rails = predicted_rail_fractions(
+                    graph, new_plan.alphas)
             self.plans[graph.name] = new_plan
         self.sim.ledger.emit("infer", lat, eb, model=graph.name)
+        # joint-planning feedback: reconcile the plan's predicted rail
+        # fractions against the measured per-rail attribution; a correction
+        # crossing the hysteresis bumps the contention-model version, so
+        # every cached joint plan goes stale and the next plan() re-solves
+        if self.coexec is not None:
+            pred = getattr(plan, "coexec_rails", None)
+            if pred is not None and self.coexec.observe(pred, eb):
+                self.sim.ledger.count("coexec_corrections")
         n = len(stats.latencies)
         if n % self.replan_period == 0:
             self.plan(graph)
@@ -277,11 +319,17 @@ class AdaOperController:
         learns (and the partitioner plans against) contended physics — the
         same contention model the serving engine's continuous scheduler runs
         under. Implemented as a ``run_trace`` replay of the all-resident
-        round-robin arrival source (identical execution order)."""
+        round-robin arrival source (identical execution order). With a
+        ``coexec`` planner attached, the resident set is declared so every
+        plan is solved *jointly* with its co-runners' contention priced in."""
         prev_coexec = self.sim.coexec
+        prev_resident = self._resident
         self.sim.set_coexec(len(graphs))
+        if self.coexec is not None:
+            self.set_resident(graphs)
         try:
             self.run_trace(round_robin_arrivals(graphs, iters))
         finally:
             self.sim.set_coexec(prev_coexec)
+            self._resident = prev_resident
         return {g.name: self.stats[g.name] for g in graphs}

@@ -334,6 +334,28 @@ def dp_partition(graph: OpGraph, cost_fn: CostFn, objective: str = "edp",
     return best
 
 
+def score_plan(graph: OpGraph, alphas: np.ndarray, cost_fn: CostFn) -> PartitionPlan:
+    """Price a fixed assignment of alphas under ``cost_fn`` (one batched
+    call). Used wherever a plan was *found* with a different objective or a
+    wrapped cost model — segment re-solves, contention-priced joint plans —
+    but must be *accounted* on the base predictor's scale."""
+    alphas = np.asarray(alphas, np.float64)
+    prevs = np.empty_like(alphas)
+    prevs[0] = alphas[0]
+    prevs[1:] = alphas[:-1]
+    if hasattr(cost_fn, "batch_cols"):
+        lat_v, en_v = cost_fn.batch_cols(graph.nodes, None, alphas, prevs)
+    elif hasattr(cost_fn, "batch"):
+        lat_v, en_v = cost_fn.batch(
+            [(op, float(a), float(p)) for op, a, p in zip(graph.nodes, alphas, prevs)])
+    else:
+        lat_v = np.empty(len(alphas))
+        en_v = np.empty(len(alphas))
+        for j, (op, a, p) in enumerate(zip(graph.nodes, alphas, prevs)):
+            lat_v[j], en_v[j] = cost_fn(op, float(a), float(p))
+    return PartitionPlan(alphas, float(np.sum(lat_v)), float(np.sum(en_v)))
+
+
 def incremental_repartition(graph: OpGraph, plan: PartitionPlan, cost_fn: CostFn,
                             segment: Tuple[int, int], objective: str = "edp",
                             lam: Optional[float] = None) -> PartitionPlan:
@@ -405,17 +427,4 @@ def incremental_repartition(graph: OpGraph, plan: PartitionPlan, cost_fn: CostFn
     alphas = plan.alphas.copy()
     alphas[lo : hi + 1] = a_seg
     # recompute plan-level totals with the true cost_fn (one batched call)
-    prevs = np.empty_like(alphas)
-    prevs[0] = alphas[0]
-    prevs[1:] = alphas[:-1]
-    if hasattr(cost_fn, "batch_cols"):
-        lat_v, en_v = cost_fn.batch_cols(graph.nodes, None, alphas, prevs)
-    elif hasattr(cost_fn, "batch"):
-        lat_v, en_v = cost_fn.batch(
-            [(op, float(a), float(p)) for op, a, p in zip(graph.nodes, alphas, prevs)])
-    else:
-        lat_v = np.empty(len(alphas))
-        en_v = np.empty(len(alphas))
-        for j, (op, a, p) in enumerate(zip(graph.nodes, alphas, prevs)):
-            lat_v[j], en_v[j] = cost_fn(op, float(a), float(p))
-    return PartitionPlan(alphas, float(np.sum(lat_v)), float(np.sum(en_v)))
+    return score_plan(graph, alphas, cost_fn)

@@ -50,6 +50,15 @@ BUS_GBPS = 9.0  # CPU<->GPU staging via shared DRAM (CoDL's data-transform cost)
 BUS_PJ_PER_BYTE = 110.0
 SYNC_OVERHEAD_S = 10e-6  # co-execution join overhead per op
 
+# ----- contention constants (named so repro.core.coexec seeds its
+# contention-aware cost model from the same numbers the physics uses;
+# values unchanged — every use below is bit-identical to the literals) -----
+COEXEC_BG_PER_RUNNER = 0.05   # extra cpu/gpu background util per co-runner
+BG_AVAIL_SLOPE = 0.35         # throughput stolen per unit background util
+COEXEC_THERM_PER_RUNNER = 0.06  # thermal-target lift per co-runner
+THERM_LAT_SLOPE = 0.20        # latency inflation per unit thermal state
+THERM_EN_SLOPE = 0.35         # energy inflation per unit thermal state
+
 PRESETS = {
     # (cpu_f, gpu_f, cpu_bg_util, gpu_bg_util, volatility)
     "moderate": dict(cpu_f=1.49, gpu_f=0.499, cpu_bg=0.788, gpu_bg=0.10, vol=0.03),
@@ -197,7 +206,7 @@ class DeviceSim:
         # thermal integrator: sustained activity + bg load heat the die;
         # co-running workers keep more silicon hot
         target = min(1.0, 0.25 + 0.5 * active + 0.4 * s.cpu_bg
-                     + 0.06 * (self.coexec - 1))
+                     + COEXEC_THERM_PER_RUNNER * (self.coexec - 1))
         self._therm += 0.08 * (target - self._therm) + 0.01 * r.normal()
         self._therm = float(np.clip(self._therm, 0.0, 1.0))
         # OU pull toward preset mean + noise; clamp to spec range
@@ -234,7 +243,7 @@ class DeviceSim:
         # Background load steals throughput sub-linearly: the DL threads run
         # at elevated priority on the big cores, so 90% average utilization
         # costs ~x2, not x10 (scheduler model, calibrated vs CoDL's report).
-        avail = max(0.05, 1.0 - 0.35 * bg)
+        avail = max(0.05, 1.0 - BG_AVAIL_SLOPE * bg)
         t_compute = flops / (spec.gflops_per_ghz * f * 1e9 * avail)
         t_mem = bytes_ / (spec.mem_bw_gbps * 1e9 * (0.5 + 0.5 * avail))
         return max(t_compute, t_mem)
@@ -289,8 +298,8 @@ class DeviceSim:
         # concurrent model workers: co-runners act as extra background load on
         # both processor classes, and the CPU<->GPU staging bus is time-shared
         cx = self.coexec
-        cpu_bg = min(0.99, s.cpu_bg + 0.05 * (cx - 1))
-        gpu_bg = min(0.95, s.gpu_bg + 0.05 * (cx - 1))
+        cpu_bg = min(0.99, s.cpu_bg + COEXEC_BG_PER_RUNNER * (cx - 1))
+        gpu_bg = min(0.95, s.gpu_bg + COEXEC_BG_PER_RUNNER * (cx - 1))
         cpu_spec, gpu_spec = self.cpu_spec, self.gpu_spec
         bytes_a = alpha * (op.bytes_in + op.bytes_out + op.weight_bytes)
         bytes_b = (1 - alpha) * (op.bytes_in + op.bytes_out + op.weight_bytes)
@@ -312,8 +321,8 @@ class DeviceSim:
         e_bus = move * BUS_PJ_PER_BYTE * 1e-12
         # latent thermal effect: leakage power and throttling grow with die
         # temperature; invisible to the monitor (see __init__)
-        k = 1.0 + 0.35 * self._therm
-        lat *= 1.0 + 0.20 * self._therm
+        k = 1.0 + THERM_EN_SLOPE * self._therm
+        lat *= 1.0 + THERM_LAT_SLOPE * self._therm
         # injected memory pressure inflates latency, invisibly to the
         # monitor (like the thermal state). Guarded so the arithmetic is
         # untouched — bit-identical — when no mem_pressure window is active.

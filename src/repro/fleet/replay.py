@@ -93,7 +93,8 @@ class DeviceReplay:
                  calib_samples: int = 350, use_gru: bool = False,
                  objective: str = "edp", backend: str = "graph",
                  serving_models: Optional[Dict[str, tuple]] = None,
-                 max_slots: int = 4, fault_plan: Optional[FaultPlan] = None):
+                 max_slots: int = 4, fault_plan: Optional[FaultPlan] = None,
+                 joint: bool = False):
         if backend not in ("graph", "serving"):
             raise ValueError(f"unknown replay backend {backend!r}; choose "
                              "from ('graph', 'serving')")
@@ -110,17 +111,35 @@ class DeviceReplay:
                                         n_samples=calib_samples,
                                         seed=profile.seed,
                                         sim_factory=profile.sim_factory())
+        # joint=True: one contention model + joint-plan cache per device,
+        # shared by the controller and (in serving mode) the scheduler —
+        # both plan against the same ledger-corrected contention pricing
+        self.coexec = None
+        if joint:
+            from repro.core.coexec import CoexecPlanner
+            self.coexec = CoexecPlanner(objective=objective)
         self.controller = AdaOperController(self.sim, self.profiler,
-                                            objective=objective)
+                                            objective=objective,
+                                            coexec=self.coexec)
         self.engine = None
         if backend == "serving":
             from repro.serving.engine import AdaOperScheduler, ServingEngine
             self.engine = ServingEngine(
-                scheduler=AdaOperScheduler(self.profiler, self.sim),
+                scheduler=AdaOperScheduler(self.profiler, self.sim,
+                                           coexec=self.coexec),
                 mode="continuous", max_slots=max_slots,
                 sampling_seed=profile.seed)
             for name, (cfg, params) in (serving_models or {}).items():
                 self.engine.add_model(name, cfg, params, max_len=64)
+
+    def _set_resident_graphs(self, trace: Trace) -> None:
+        """Declare the trace's distinct graph-path models as the
+        controller's resident set for joint planning (no-op without a
+        coexec planner)."""
+        if self.coexec is None:
+            return
+        models = sorted({r.model for r in trace if r.model in self.graphs})
+        self.controller.set_resident([self.graphs[m] for m in models])
 
     def run(self, trace: Trace) -> Tuple[List[RequestRecord], Dict[str, int]]:
         b0 = self.sim.battery_pct
@@ -180,11 +199,13 @@ class DeviceReplay:
         # resident concurrent tasks contend like run_concurrent's setting
         prev = self.sim.coexec
         self.sim.set_coexec(max(1, len({r.model for r in trace})))
+        self._set_resident_graphs(trace)
         try:
             self.controller.run_trace(
                 [(r.t_arrival_s, self.graphs[r.model], r) for r in trace])
         finally:
             self.sim.set_coexec(prev)
+            self.controller.set_resident(())
         c = self._ledger_counter_delta()
         out = {"repartitions": c.get("repartitions", 0),
                "incremental": c.get("incremental", 0),
@@ -254,6 +275,9 @@ class DeviceReplay:
         items = list(trace)  # time-sorted, uids in arrival order
         by_uid = {r.uid: r for r in trace}
         n_resident = len({r.model for r in trace})
+        # joint planning: vision/AR frames plan against each other (and the
+        # LLM co-runner, via n_resident > len(resident graphs))
+        self._set_resident_graphs(trace)
         responses: List = []
         frames: List[Tuple] = []  # (-priority, t_arrival, uid) heap
         t = 0.0
@@ -310,6 +334,7 @@ class DeviceReplay:
                     t = eng._vtime
         finally:
             eng._vtime = None
+            self.controller.set_resident(())
         counters = self._serving_counters()
         c = self._ledger_counter_delta()
         counters["repartitions"] = c.get("repartitions", 0)
@@ -327,7 +352,8 @@ class FleetReplay:
                  use_gru: bool = False, backend: str = "graph",
                  graphs: Optional[Dict[str, OpGraph]] = None,
                  serving_models: Optional[Dict[str, tuple]] = None,
-                 rate_scale: float = 1.0, max_slots: int = 4):
+                 rate_scale: float = 1.0, max_slots: int = 4,
+                 joint: bool = False):
         self.population = population
         self.scenario = scenario
         self.duration_s = duration_s
@@ -339,6 +365,9 @@ class FleetReplay:
         self.serving_models = serving_models
         self.rate_scale = rate_scale
         self.max_slots = max_slots
+        # contention-aware joint co-execution planning per device
+        # (repro.core.coexec); False keeps independent planning bit-identical
+        self.joint = joint
 
     def device_trace(self, idx: int) -> Trace:
         return make_trace(self.scenario, self.duration_s,
@@ -363,7 +392,7 @@ class FleetReplay:
                               calib_samples=self.calib_samples,
                               use_gru=self.use_gru, backend=self.backend,
                               serving_models=self.serving_models,
-                              max_slots=self.max_slots)
+                              max_slots=self.max_slots, joint=self.joint)
             records, counters = dr.run(trace)
             devices.append(dr.metrics(records, counters))
             all_latencies.extend(r.latency_s for r in records)

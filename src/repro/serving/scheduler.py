@@ -14,8 +14,9 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import List, Optional, Tuple
 
+from repro.core.coexec import FULL_DUTY, CoexecPlanner
 from repro.core.opgraph import build_transformer_graph
-from repro.core.partitioner import dp_partition
+from repro.core.partitioner import dp_partition, score_plan
 from repro.core.profiler import state_bucket
 from repro.faults.recovery import pinned_partition, surviving_alpha
 
@@ -52,17 +53,49 @@ class AdaOperScheduler:
 
     def __init__(self, profiler, sim, objective: str = "edp",
                  candidate_batches=(1, 2, 4, 8), plan_cache_size: int = 256,
-                 graph_cache_size: int = 64):
+                 graph_cache_size: int = 64,
+                 coexec: Optional[CoexecPlanner] = None):
         self.profiler = profiler
         self.sim = sim
         self.objective = objective
         self.candidates = candidate_batches
         self.plan_cache_size = plan_cache_size
         self.graph_cache_size = graph_cache_size
+        # contention-aware joint planning (repro.core.coexec): None (the
+        # default) and single-resident serving keep every plan, cache key
+        # and solve bit-identical to the independent path
+        self.coexec = coexec
+        self._resident: tuple = ()
         self._graph_cache: OrderedDict = OrderedDict()
         self._plan_cache: OrderedDict = OrderedDict()
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
+
+    def set_resident(self, models) -> bool:
+        """Declare the currently-busy worker set (the engine calls this each
+        serve round). Returns True when the set changed — the engine's
+        drift-scoped plan memo must be cleared then, since its keys do not
+        carry residency."""
+        names = tuple(sorted(models))
+        if names == self._resident:
+            return False
+        self._resident = names
+        return True
+
+    def _coexec_cost(self, cost_fn):
+        """(possibly contention-wrapped cost_fn, extra plan-cache key).
+
+        With joint planning active (a coexec planner and >= 2 resident
+        workers), ops are priced against a full-duty co-runner profile —
+        admission runs before co-runners' plan shapes are known, and the
+        ledger-feedback corrections scale each rail from there. Inactive:
+        returns the inputs untouched, so cache keys stay byte-identical."""
+        if self.coexec is None or len(self._resident) <= 1:
+            return cost_fn, ()
+        n = max(len(self._resident), getattr(self.sim, "coexec", 1))
+        wrapped = self.coexec.model.wrap(cost_fn, n, FULL_DUTY)
+        return wrapped, ("coex", self._resident, n,
+                         self.coexec.model.version())
 
     def _cache_key(self, obs) -> tuple:
         """Plan-cache scope: quantized device state, profiler correction
@@ -119,8 +152,16 @@ class AdaOperScheduler:
         (prompt-bucket, horizon-bucket) pair summing to the same length).
         A fresh solve is stamped with ``rail_fractions`` — the simulator's
         per-rail energy shares of the planned split — for ledger
-        attribution of predicted energy."""
-        key = (cfg.name, b, seq, kind) + cache_key
+        attribution of predicted energy.
+
+        With joint planning active (>= 2 resident workers and a coexec
+        planner) the DP is solved against the contention-priced cost model
+        and the winning alphas are re-scored on the base predictor, under a
+        cache key extended with the resident set + contention version —
+        single-resident serving takes the original key and solve,
+        bit-identically."""
+        joint_cost, joint_key = self._coexec_cost(cost_fn)
+        key = (cfg.name, b, seq, kind) + cache_key + joint_key
         ent = self._plan_cache.get(key)
         if ent is not None:
             self.plan_cache_hits += 1
@@ -131,7 +172,11 @@ class AdaOperScheduler:
         pinned = (surviving_alpha(self.sim)
                   if getattr(self.sim, "faulted_rails", None) else None)
         if pinned is None:
-            ent = dp_partition(g, cost_fn, objective=self.objective)
+            ent = dp_partition(g, joint_cost, objective=self.objective)
+            if joint_cost is not cost_fn:
+                # contention priced the search; the accounting (admission,
+                # EDP scoring, ledger charges) stays on the base predictor
+                ent = score_plan(g, ent.alphas, cost_fn)
         else:
             # processor fallback: a rail is down, pin every op to the
             # survivor (cache-scoped to the fault epoch via cache_key)

@@ -1,0 +1,192 @@
+"""Docs consistency check (CI lint job, next to the import-cycle check).
+
+Three classes of silent docs rot, each of which has actually happened here:
+
+1. **Broken relative links** — every ``[text](target)`` in every tracked
+   ``*.md`` whose target is not an URL/anchor must resolve to an existing
+   file or directory (anchors are stripped; ``http(s)://`` / ``mailto:``
+   are skipped, URL-checking is not this tool's job).
+2. **Orphaned docs** — every file under ``docs/`` must be reachable from
+   the documentation spine: referenced (directly or transitively) from
+   ``README.md`` or ``ROADMAP.md``. A doc nobody links to is a doc nobody
+   reads — new docs must be added to the README table of contents.
+3. **Stale package map** — every module/directory named in
+   ``docs/architecture.md``'s "Package map" code block must exist under
+   ``src/repro/``; a refactor that moves or deletes a module must update
+   the map.
+
+Usage:  python tools/check_docs.py [repo-root]
+Exit status 1 with one line per violation when anything is broken.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Set
+
+SKIP_DIRS = {".git", "__pycache__", ".claude", "node_modules", ".venv"}
+
+# [text](target) — excluding images' alt part is irrelevant (same syntax);
+# nested brackets in text are rare enough to ignore
+_LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+
+
+def markdown_files(root: str) -> List[str]:
+    out = []
+    for dirpath, dirnames, files in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in sorted(files):
+            if f.endswith(".md"):
+                out.append(os.path.join(dirpath, f))
+    return out
+
+
+def check_links(md_files: List[str], root: str) -> List[str]:
+    errors = []
+    for path in md_files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                errors.append(
+                    f"{os.path.relpath(path, root)}: broken link "
+                    f"({target!r} -> {os.path.relpath(resolved, root)})")
+    return errors
+
+
+def _references(md_path: str) -> Set[str]:
+    """Absolute paths of existing files a markdown file links or names."""
+    refs: Set[str] = set()
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(md_path)
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel:
+            p = os.path.normpath(os.path.join(base, rel))
+            if os.path.exists(p):
+                refs.add(p)
+    # bare mentions like `docs/coexec.md` in prose or code blocks count as
+    # references too (ROADMAP uses this style)
+    for rel in re.findall(r"docs/[\w.-]+\.md", text):
+        p = os.path.normpath(os.path.join(base, "..", rel)) \
+            if os.path.basename(base) == "docs" else \
+            os.path.normpath(os.path.join(base, rel))
+        if os.path.exists(p):
+            refs.add(p)
+    return refs
+
+
+def check_docs_referenced(root: str) -> List[str]:
+    docs_dir = os.path.join(root, "docs")
+    if not os.path.isdir(docs_dir):
+        return []
+    docs = {os.path.join(docs_dir, f) for f in os.listdir(docs_dir)
+            if f.endswith(".md")}
+    # transitive closure from the spine: README + ROADMAP reach the docs
+    # they link, and a linked doc's own links count (architecture.md ->
+    # robustness.md keeps robustness.md reachable)
+    frontier = [os.path.join(root, n) for n in ("README.md", "ROADMAP.md")
+                if os.path.exists(os.path.join(root, n))]
+    seen: Set[str] = set(frontier)
+    reachable: Set[str] = set()
+    while frontier:
+        p = frontier.pop()
+        for ref in _references(p):
+            if ref in docs and ref not in reachable:
+                reachable.add(ref)
+                if ref not in seen:
+                    seen.add(ref)
+                    frontier.append(ref)
+    errors = []
+    for d in sorted(docs - reachable):
+        errors.append(
+            f"docs/{os.path.basename(d)}: not referenced from README.md or "
+            f"ROADMAP.md (add it to the README table of contents)")
+    return errors
+
+
+def check_package_map(root: str) -> List[str]:
+    arch = os.path.join(root, "docs", "architecture.md")
+    if not os.path.exists(arch):
+        return []
+    with open(arch, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    # the fenced code block following the "## Package map" heading
+    block: List[str] = []
+    in_section = in_fence = False
+    for line in lines:
+        if line.strip().lower().startswith("## package map"):
+            in_section = True
+            continue
+        if in_section:
+            if line.startswith("```"):
+                if in_fence:
+                    break
+                in_fence = True
+                continue
+            if in_fence:
+                block.append(line)
+    errors = []
+    src = os.path.join(root, "src")
+    current_dir = ""
+    for line in block:
+        tok = line.split()[0] if line.split() else ""
+        if not tok or tok.startswith("src/"):
+            continue
+        # description-continuation lines ("... owns the device's ledger")
+        # carry no path token; paths are dirs ending in "/" or *.py names
+        for part in tok.split(","):
+            part = part.strip().rstrip(",")
+            if not part:
+                continue
+            if part.endswith("/"):
+                d = os.path.join(src, "repro", part.rstrip("/"))
+                if not os.path.isdir(d):
+                    errors.append(
+                        f"docs/architecture.md package map: directory "
+                        f"{part!r} missing from src/repro/")
+                elif "/" not in part.rstrip("/"):
+                    current_dir = part.rstrip("/")
+            elif part.endswith(".py"):
+                # "a.py/b.py" shorthand and "pkg/mod.py" explicit paths
+                names = ([p + ".py" for p in part[:-3].split(".py/")]
+                         if ".py/" in part else [part])
+                for name in names:
+                    rel = (name if "/" in name
+                           else os.path.join(current_dir, name))
+                    p = os.path.join(src, "repro", rel)
+                    if not os.path.exists(p):
+                        errors.append(
+                            f"docs/architecture.md package map: module "
+                            f"{rel!r} missing from src/repro/")
+    return errors
+
+
+def main(root: str = None) -> int:
+    root = os.path.abspath(root or
+                           os.path.join(os.path.dirname(__file__), ".."))
+    errors = (check_links(markdown_files(root), root)
+              + check_docs_referenced(root)
+              + check_package_map(root))
+    for e in errors:
+        print(f"docs check: {e}")
+    if errors:
+        print(f"docs check: {len(errors)} violation(s)")
+        return 1
+    print("docs check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else None))
