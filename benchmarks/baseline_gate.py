@@ -25,22 +25,26 @@ _FLEET_REGEN_FLAGS = {
 
 
 def fleet_regen_cmd(baseline_path: str) -> str:
-    """The exact ``bench_fleet`` invocation that rewrites ``baseline_path``.
+    """The exact invocation that rewrites ``baseline_path``.
 
     Derived from the baseline *filename* — not from the failing run's
     config — so the echoed recipe always regenerates the very file the gate
     compared against (a scenario replay gated on the serving backend, or a
     custom baseline path, used to print a recipe for a different file)."""
     name = os.path.basename(baseline_path)
+    path = os.path.abspath(baseline_path)
+    if path.startswith(_REPO_ROOT + os.sep):
+        path = os.path.relpath(path, _REPO_ROOT)
+    if name == "BENCH_uncertainty.json":
+        # the uncertainty replay has its own fixed-config entry point
+        return ("PYTHONPATH=src python -m benchmarks.bench_uncertainty "
+                f"--json {path}")
     flag = _FLEET_REGEN_FLAGS.get(name)
     if flag is None and name.startswith("BENCH_fleet_") and name.endswith(".json"):
         scenario = name[len("BENCH_fleet_"):-len(".json")]
         flag = f"--scenario-smoke-config {scenario}"
     if flag is None:
         flag = "--smoke-config"
-    path = os.path.abspath(baseline_path)
-    if path.startswith(_REPO_ROOT + os.sep):
-        path = os.path.relpath(path, _REPO_ROOT)
     return ("PYTHONPATH=src python -m benchmarks.bench_fleet "
             f"{flag} --json {path}")
 

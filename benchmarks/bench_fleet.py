@@ -96,7 +96,8 @@ def _default_serving_models():
 def run(devices: int = 4, scenario: str = "mixed", seed: int = 0,
         duration: float = 12.0, calib: int = 350, json_path: str = None,
         smoke: bool = False, baseline_path: str = BASELINE_PATH,
-        backend: str = "graph", emit=print) -> dict:
+        backend: str = "graph", uncertainty: bool = False,
+        risk_level: float = None, emit=print) -> dict:
     from repro.fleet import FleetReplay, sample_population
 
     population = sample_population(devices, seed=seed)
@@ -104,13 +105,15 @@ def run(devices: int = 4, scenario: str = "mixed", seed: int = 0,
                       else None)
     replay = FleetReplay(population, scenario=scenario, duration_s=duration,
                          seed=seed, calib_samples=calib, backend=backend,
-                         serving_models=serving_models)
+                         serving_models=serving_models,
+                         uncertainty=uncertainty, risk_level=risk_level)
     report = replay.run()
     out = report.to_dict()
     out["smoke"] = smoke
     out["config"] = {"devices": devices, "scenario": scenario, "seed": seed,
                      "duration_s": duration, "calib_samples": calib,
-                     "backend": backend}
+                     "backend": backend, "uncertainty": uncertainty,
+                     "risk_level": risk_level}
 
     f = report.fleet
     for d in report.devices:
@@ -131,6 +134,13 @@ def run(devices: int = 4, scenario: str = "mixed", seed: int = 0,
          f"gpu_mJ={rails.get('gpu', 0.0)*1e3:.3f};"
          f"bus_mJ={rails.get('bus', 0.0)*1e3:.3f};"
          f"total_mJ={f['energy_j']*1e3:.3f}")
+    if "interval_coverage" in f:
+        # calibrated-interval quality (repro.uncertainty); present only when
+        # the replay ran with an uncertainty model attached
+        c = f.get("counters", {})
+        emit(f"fleet_uncertainty,,coverage={f['interval_coverage']:.3f};"
+             f"width_mJ_mean={f['interval_width_j_mean']*1e3:.3f};"
+             f"interval_repartitions={c.get('interval_repartitions', 0)}")
 
     if json_path:
         with open(json_path, "w") as fp:

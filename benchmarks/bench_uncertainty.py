@@ -1,0 +1,111 @@
+"""Uncertainty benchmark: calibrated intervals + risk-aware control.
+
+``PYTHONPATH=src python -m benchmarks.bench_uncertainty
+    [--json BENCH_uncertainty.json] [--smoke]``
+
+Replays the fixed mixed-trace serving configuration twice on the same
+virtual timeline: once in point mode (no uncertainty model — the exact
+arithmetic every other baseline gates) and once with a per-device
+:class:`~repro.uncertainty.UncertaintyModel` attached and risk-aware
+admission at ``RISK_LEVEL``. The uncertainty run is the gated artifact
+(``benchmarks/baselines/BENCH_uncertainty.json``); the point run rides
+along as the comparison column.
+
+Asserted every run (not just against the baseline):
+
+* prequential interval coverage lands in ``COVERAGE_BAND`` around the 0.9
+  target — the conformal calibration actually calibrates on this trace;
+* risk-aware admission does not regress fleet SLO attainment vs the point
+  replay (the upper-quantile pricing is allowed to admit *less*, never to
+  miss more deadlines).
+
+The smoke gate (``benchmarks/run.py --smoke`` / CI ``bench-smoke``) then
+pins the replay against the committed baseline: identical request count,
+energy/request and SLO within the shared fleet tolerances, and **exact**
+``interval_observations`` / ``interval_repartitions`` counters — the
+interval-triggered repartition schedule is deterministic in the seed, so
+any drift in the quantile math or the trigger logic fails loudly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks import bench_fleet
+from benchmarks.baseline_gate import BASELINE_DIR, gate_fleet
+
+BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_uncertainty.json")
+
+# same fixed serving configuration as BENCH_fleet_serving.json so the point
+# column is directly comparable to the committed serving baseline
+UNC_SMOKE = dict(bench_fleet.SERVING_SMOKE)
+RISK_LEVEL = 0.9
+# prequential coverage band around the 0.9 target: the lower edge allows
+# the q_default warm-up before the first conformal commit, the upper edge
+# rejects vacuously wide intervals
+COVERAGE_BAND = (0.85, 0.98)
+# fleet counters pinned exactly against the baseline (the replay is
+# deterministic in the seed, so the whole trigger schedule must reproduce)
+UNC_COUNTER_KEYS = ("interval_observations", "interval_repartitions")
+
+
+def smoke_run(json_path: str = None, smoke: bool = True,
+              baseline_path: str = BASELINE_PATH, emit=print) -> dict:
+    cfg = UNC_SMOKE
+    common = dict(devices=cfg["devices"], scenario=cfg["scenario"],
+                  seed=cfg["seed"], duration=cfg["duration"],
+                  calib=cfg["calib"], backend="serving", emit=emit)
+    # point-mode reference: identical replay, no model attached (bit-equal
+    # to the BENCH_fleet_serving configuration)
+    point = bench_fleet.run(smoke=False, **common)
+    out = bench_fleet.run(smoke=False, uncertainty=True,
+                          risk_level=RISK_LEVEL, **common)
+    pf, uf = point["fleet"], out["fleet"]
+    out["point"] = {"n_requests": pf["n_requests"],
+                    "energy_per_request_j": pf["energy_per_request_j"],
+                    "slo_attainment": pf["slo_attainment"],
+                    "latency_s": pf["latency_s"]}
+
+    cov = uf.get("interval_coverage")
+    assert cov is not None, (
+        "uncertainty replay produced no interval observations — the model "
+        "was not attached or the feedback path never fired")
+    lo, hi = COVERAGE_BAND
+    assert lo <= cov <= hi, (
+        f"interval coverage {cov:.3f} outside [{lo}, {hi}] at 0.9 target "
+        f"({uf['counters'].get('interval_covered', 0)}/"
+        f"{uf['counters'].get('interval_observations', 0)} covered)")
+    assert uf["slo_attainment"] >= pf["slo_attainment"] - 1e-9, (
+        f"risk-aware admission regressed SLO attainment: "
+        f"{uf['slo_attainment']:.3f} vs point {pf['slo_attainment']:.3f}")
+    emit(f"uncertainty_vs_point,,coverage={cov:.3f};"
+         f"slo_unc={uf['slo_attainment']:.3f};"
+         f"slo_point={pf['slo_attainment']:.3f};"
+         f"energy_mJ_per_req_unc={uf['energy_per_request_j']*1e3:.3f};"
+         f"energy_mJ_per_req_point={pf['energy_per_request_j']*1e3:.3f}")
+
+    if json_path:
+        with open(json_path, "w") as fp:
+            json.dump(out, fp, indent=2, sort_keys=True)
+    if smoke:
+        gate_fleet(out, baseline_path,
+                   energy_tol=bench_fleet.ENERGY_TOL,
+                   slo_tol=bench_fleet.SLO_TOL,
+                   label="uncertainty[serving:mixed]",
+                   counter_keys=UNC_COUNTER_KEYS)
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_uncertainty.json",
+                    help="output JSON path (the uncertainty-mode replay)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate against the committed baseline")
+    args = ap.parse_args(argv)
+    return smoke_run(json_path=args.json, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,14 +28,16 @@ import argparse
 import os
 import time
 
-SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent", "coexec", "fleet")
+SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent", "coexec", "fleet",
+                  "uncertainty")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated sections (fig2,concurrent,coexec,"
-                         "profiler,partitioner,kernels,roofline,fleet)")
+                         "profiler,partitioner,kernels,roofline,fleet,"
+                         "uncertainty)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced fast-section run with loud fast-path asserts")
     ap.add_argument("--json-dir", default=".",
@@ -52,7 +54,7 @@ def main(argv=None) -> None:
     else:
         sections = set((args.only or
                         "fig2,concurrent,coexec,profiler,partitioner,"
-                        "kernels,roofline,fleet")
+                        "kernels,roofline,fleet,uncertainty")
                        .split(","))
     t0 = time.time()
 
@@ -107,6 +109,11 @@ def main(argv=None) -> None:
             bench_fleet.chaos_smoke_run(json_path=jp("BENCH_fleet_chaos.json"))
         else:
             bench_fleet.run(json_path=jp("BENCH_fleet.json"))
+    if "uncertainty" in sections:
+        banner("Uncertainty: calibrated intervals + risk-aware admission")
+        from benchmarks import bench_uncertainty
+        bench_uncertainty.smoke_run(json_path=jp("BENCH_uncertainty.json"),
+                                    smoke=args.smoke)
     if "kernels" in sections:
         banner("Pallas kernels (interpret-mode regression)")
         from benchmarks import bench_kernels

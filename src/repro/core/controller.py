@@ -64,7 +64,8 @@ class AdaOperController:
                  objective: str = "edp", drift_threshold: float = 0.35,
                  replan_period: int = 16, segment_halo: int = 2,
                  max_op_retries: int = 3,
-                 coexec: "CoexecPlanner" = None):
+                 coexec: "CoexecPlanner" = None,
+                 legacy_drift: bool = False):
         self.sim = sim
         self.profiler = profiler
         self.objective = objective
@@ -72,6 +73,11 @@ class AdaOperController:
         self.replan_period = replan_period
         self.segment_halo = segment_halo
         self.max_op_retries = max_op_retries
+        # with an uncertainty model attached to the profiler, repartition
+        # triggers on observations falling outside the calibrated interval
+        # instead of the fixed drift_threshold hysteresis; legacy_drift=True
+        # keeps the fixed threshold for bit-exact legacy baselines
+        self.legacy_drift = legacy_drift
         # contention-aware joint planner (repro.core.coexec): None (the
         # default) keeps every planning path bit-identical to independent
         # per-model planning
@@ -191,7 +197,23 @@ class AdaOperController:
                 model=graph.name,
                 meta={"fault": "transient_op", "retries": retried})
         drifts = self.profiler.feedback_batch(items, obs, lats, ens)
-        drifted = [i for i, d in enumerate(drifts) if d > self.drift_threshold]
+        # interval coverage accounting rides the ledger's integer counters
+        # (absent without an attached uncertainty model, so non-uncertainty
+        # baselines keep the exact pre-existing counter schema)
+        unc_stats = self.profiler.take_interval_stats()
+        if unc_stats is not None:
+            self.sim.ledger.count("interval_observations", unc_stats["n"])
+            self.sim.ledger.count("interval_covered", unc_stats["covered"])
+            self.sim.ledger.count("interval_width_uj", unc_stats["width_uj"])
+        outside = self.profiler.take_interval_outside()
+        interval_mode = outside is not None and not self.legacy_drift
+        if interval_mode:
+            # principled replacement for the fixed hysteresis: an op drifted
+            # when its observed energy fell outside the calibrated interval
+            drifted = [int(i) for i in np.nonzero(outside)[0]]
+        else:
+            drifted = [i for i, d in enumerate(drifts)
+                       if d > self.drift_threshold]
         stats.latencies.append(lat)
         stats.energies.append(en)
         if drifted:
@@ -204,6 +226,10 @@ class AdaOperController:
         if drifted and self.sim.faulted_rails:
             drifted = []
         if drifted:
+            if interval_mode:
+                # the gated counter: repartitions whose *trigger* was an
+                # observation escaping its calibrated interval
+                self.sim.ledger.count("interval_repartitions")
             obs2 = self.sim.observe()
             segs = self._merge_segments(drifted, len(graph))
             new_plan = plan

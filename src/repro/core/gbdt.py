@@ -175,3 +175,27 @@ class GBDTRegressor:
     def score_rmse(self, X, y) -> float:
         p = self.predict(X)
         return float(np.sqrt(np.mean((p - np.asarray(y)) ** 2)))
+
+
+# seed stride between ensemble members: prime, so member subsample streams
+# never alias each other (or a neighbouring profiler's base models)
+_MEMBER_SEED_STRIDE = 7919
+
+
+def fit_ensemble(X: np.ndarray, y: np.ndarray, n_members: int = 4,
+                 seed: int = 0, n_estimators: int = 60,
+                 subsample: float = 0.7, **kwargs) -> List[GBDTRegressor]:
+    """Seeded diversity ensemble for spread-based uncertainty.
+
+    Members share the training data but draw independent boosting-subsample
+    streams (distinct seeds, aggressive ``subsample``), so their predictive
+    *spread* tracks where the data pins the cost surface down and where it
+    does not — the heteroscedastic scale ``sigma(x)`` the conformal layer
+    (``repro.uncertainty``) calibrates into honest intervals. Fewer, shorter
+    boosters than the point model: the spread, not each member's accuracy,
+    is the product.
+    """
+    return [GBDTRegressor(n_estimators=n_estimators, subsample=subsample,
+                          seed=seed + _MEMBER_SEED_STRIDE * (i + 1),
+                          **kwargs).fit(X, y)
+            for i in range(n_members)]

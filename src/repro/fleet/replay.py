@@ -48,6 +48,12 @@ _ROBUST_COUNTER_KEYS = ("faults", "recoveries", "fault_replans", "op_retries",
                         "deadline_misses", "deadline_evictions",
                         "battery_dead")
 
+# uncertainty counters (repro.uncertainty), surfaced only when nonzero like
+# the robustness set: runs without an attached uncertainty model keep the
+# pre-uncertainty report schema byte-for-byte
+_UNCERTAINTY_COUNTER_KEYS = ("interval_observations", "interval_covered",
+                             "interval_width_uj", "interval_repartitions")
+
 
 def _require_models(trace: Trace, known, backend: str) -> None:
     """Fail fast when a trace names models the backend cannot serve. The
@@ -94,7 +100,8 @@ class DeviceReplay:
                  objective: str = "edp", backend: str = "graph",
                  serving_models: Optional[Dict[str, tuple]] = None,
                  max_slots: int = 4, fault_plan: Optional[FaultPlan] = None,
-                 joint: bool = False):
+                 joint: bool = False, uncertainty: bool = False,
+                 risk_level: Optional[float] = None):
         if backend not in ("graph", "serving"):
             raise ValueError(f"unknown replay backend {backend!r}; choose "
                              "from ('graph', 'serving')")
@@ -107,6 +114,15 @@ class DeviceReplay:
         self.sim = profile.make_sim()
         self.profiler = RuntimeEnergyProfiler(use_gru=use_gru,
                                               seed=profile.seed)
+        # uncertainty=True: per-device quantile ensembles + conformal
+        # calibration (repro.uncertainty), attached before calibration so
+        # the spread members fit on this device's trace; False keeps every
+        # prediction and plan bit-identical (the inert default)
+        self.uncertainty = None
+        if uncertainty:
+            from repro.uncertainty import UncertaintyModel
+            self.uncertainty = UncertaintyModel(seed=profile.seed)
+            self.profiler.attach_uncertainty(self.uncertainty)
         self.profiler.offline_calibrate(list(graphs.values()),
                                         n_samples=calib_samples,
                                         seed=profile.seed,
@@ -128,7 +144,7 @@ class DeviceReplay:
                 scheduler=AdaOperScheduler(self.profiler, self.sim,
                                            coexec=self.coexec),
                 mode="continuous", max_slots=max_slots,
-                sampling_seed=profile.seed)
+                sampling_seed=profile.seed, risk_level=risk_level)
             for name, (cfg, params) in (serving_models or {}).items():
                 self.engine.add_model(name, cfg, params, max_len=64)
 
@@ -211,6 +227,7 @@ class DeviceReplay:
                "incremental": c.get("incremental", 0),
                "drift_events": c.get("drift_events", 0)}
         out.update(self._robust_counters(c))
+        out.update(self._uncertainty_counters(c))
         return out
 
     def _ledger_counter_delta(self) -> Dict[str, int]:
@@ -226,6 +243,13 @@ class DeviceReplay:
         deadline machinery). Zero counters are omitted so non-chaos runs
         keep the pre-chaos report schema byte-for-byte."""
         return {k: c[k] for k in _ROBUST_COUNTER_KEYS if c.get(k)}
+
+    @staticmethod
+    def _uncertainty_counters(c: Dict[str, int]) -> Dict[str, int]:
+        """Nonzero interval coverage/width/repartition counters — absent
+        without an attached uncertainty model (same only-when-nonzero rule
+        as the robustness set)."""
+        return {k: c[k] for k in _UNCERTAINTY_COUNTER_KEYS if c.get(k)}
 
     def _llm_request(self, trace: Trace, r):
         """Deterministic synthetic prompt for one LLM trace request."""
@@ -251,6 +275,7 @@ class DeviceReplay:
                "admission_denials": c.get("admission_denials", 0),
                "rejected": c.get("rejected", 0)}
         out.update(self._robust_counters(c))
+        out.update(self._uncertainty_counters(c))
         return out
 
     def _run_serving(self, trace: Trace) -> Dict[str, int]:
@@ -353,7 +378,8 @@ class FleetReplay:
                  graphs: Optional[Dict[str, OpGraph]] = None,
                  serving_models: Optional[Dict[str, tuple]] = None,
                  rate_scale: float = 1.0, max_slots: int = 4,
-                 joint: bool = False):
+                 joint: bool = False, uncertainty: bool = False,
+                 risk_level: Optional[float] = None):
         self.population = population
         self.scenario = scenario
         self.duration_s = duration_s
@@ -368,6 +394,10 @@ class FleetReplay:
         # contention-aware joint co-execution planning per device
         # (repro.core.coexec); False keeps independent planning bit-identical
         self.joint = joint
+        # per-device calibrated uncertainty + risk-aware admission
+        # (repro.uncertainty); False stays bit-identical to point estimates
+        self.uncertainty = uncertainty
+        self.risk_level = risk_level
 
     def device_trace(self, idx: int) -> Trace:
         return make_trace(self.scenario, self.duration_s,
@@ -392,7 +422,9 @@ class FleetReplay:
                               calib_samples=self.calib_samples,
                               use_gru=self.use_gru, backend=self.backend,
                               serving_models=self.serving_models,
-                              max_slots=self.max_slots, joint=self.joint)
+                              max_slots=self.max_slots, joint=self.joint,
+                              uncertainty=self.uncertainty,
+                              risk_level=self.risk_level)
             records, counters = dr.run(trace)
             devices.append(dr.metrics(records, counters))
             all_latencies.extend(r.latency_s for r in records)

@@ -141,6 +141,15 @@ class FleetReport:
             "latency_s": latency_percentiles(all_latencies),
             "counters": counters,
         }
+        # calibrated-interval quality, derived from the uncertainty counters
+        # (repro.uncertainty) — absent entirely when no model was attached,
+        # keeping point-mode reports bit-identical to the committed baselines
+        n_iv = counters.get("interval_observations", 0)
+        if n_iv:
+            fleet["interval_coverage"] = counters.get(
+                "interval_covered", 0) / n_iv
+            fleet["interval_width_j_mean"] = (
+                counters.get("interval_width_uj", 0) / 1e6) / n_iv
         return cls(scenario, seed, duration_s, backend, devices, fleet)
 
     def to_dict(self) -> dict:

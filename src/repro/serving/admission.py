@@ -31,14 +31,33 @@ class AdmissionPolicy:
     and an empty pool always admits (idle silicon costs leakage only)."""
 
     def __init__(self, scheduler: Optional[AdaOperScheduler] = None,
-                 slo_s: Optional[float] = None, edp_slack: float = 1.05):
+                 slo_s: Optional[float] = None, edp_slack: float = 1.05,
+                 risk_level: Optional[float] = None):
         self.scheduler = scheduler
         self.slo_s = slo_s
         self.edp_slack = edp_slack
+        # risk-aware admission (repro.uncertainty): 0..1 position between the
+        # point prediction and the calibrated upper interval bound at which
+        # latency/energy are priced — 1.0 admits on the full upper quantile.
+        # None (default) keeps the exact point-estimate arithmetic; plans
+        # without a stamped interval fall back to the point value too.
+        self.risk_level = risk_level
         self.log: List[dict] = []
         # engine-attached ledger: denials are counted at the source so
         # fleet counters fold from telemetry, not from re-scanning the log
         self.ledger = None
+
+    def _risk(self, plan: dict, which: str) -> float:
+        """Latency ("latency") or energy ("energy") of one decode step at
+        the configured risk level."""
+        point = plan["step_latency" if which == "latency" else "step_energy"]
+        if self.risk_level is None:
+            return point
+        iv = plan.get("interval")
+        if iv is None:
+            return point
+        hi = iv[which][1]
+        return point + self.risk_level * (hi - point)
 
     def decide(self, cfg, n_active: int, seq_len: int, max_new: int,
                wait_s: float, plan_fn=None) -> Tuple[bool, str]:
@@ -55,10 +74,17 @@ class AdmissionPolicy:
         cur = plan_fn(n_active)
         new = plan_fn(n_active + 1)
         # per-request EDP of one decode step: latency is shared by the actual
-        # batch, energy scales ~linearly with the plan's (bucketed) batch
-        edp_cur = (cur["step_latency"] / n_active) * (cur["step_energy"] / cur["batch"])
-        edp_new = (new["step_latency"] / (n_active + 1)) * (new["step_energy"] / new["batch"])
-        if self.slo_s is not None and new["step_latency"] * max_new > self.slo_s:
+        # batch, energy scales ~linearly with the plan's (bucketed) batch.
+        # With a risk level set, both sides are priced at the same upper
+        # quantile (no systematic bias in the comparison); the SLO check
+        # prices the risk-adjusted latency, so a wide (uncertain) interval
+        # admits more conservatively than a confident one.
+        edp_cur = ((self._risk(cur, "latency") / n_active)
+                   * (self._risk(cur, "energy") / cur["batch"]))
+        edp_new = ((self._risk(new, "latency") / (n_active + 1))
+                   * (self._risk(new, "energy") / new["batch"]))
+        if (self.slo_s is not None
+                and self._risk(new, "latency") * max_new > self.slo_s):
             return False, "slo-violation"
         if edp_new <= edp_cur * self.edp_slack:
             return True, "edp-improves"
@@ -69,6 +95,22 @@ class AdmissionPolicy:
                          "n_active": n_active, "uid": uid})
         if self.ledger is not None and not admit:
             self.ledger.count("admission_denials")
+
+
+def ssm_prompt_bucketed(eng, w: ModelWorker) -> bool:
+    """True when ``w``'s admission groups key on the pow2 prompt-length
+    bucket instead of the exact length: pure-SSM stacks (every layer a
+    mamba/ssd scan, no encoder) under ``eng.ssm_prompt_buckets`` — the
+    pad-safe scan makes a LEFT-padded + masked bucket prefill bit-identical
+    to exact-length prefill, so mixed-length admissions share one jitted
+    shape. Attention stacks keep exact-length grouping (padding would
+    corrupt their KV caches)."""
+    if not getattr(eng, "ssm_prompt_buckets", True) or not eng.batch_prefill:
+        return False
+    if w.cfg.is_encoder_decoder:
+        return False
+    kinds = w.cfg.layer_kinds()
+    return bool(kinds) and all(k in ("mamba", "ssd") for k in kinds)
 
 
 def validate_request(w: ModelWorker, req: Request) -> Optional[str]:
@@ -121,10 +163,12 @@ def admit_requests(eng, model: str, pool: _SlotPool, out: List[Response],
         pool.active[slot] = seq
         admitted.append(seq)
     if eng.batch_prefill:
+        bucketed = ssm_prompt_bucketed(eng, w)
         groups: Dict[tuple, List[_ActiveSeq]] = {}
         for seq in admitted:
             enc = seq.req.enc_inputs
-            key = (len(seq.req.prompt),
+            plen = len(seq.req.prompt)
+            key = (AdaOperScheduler._len_bucket(plen) if bucketed else plen,
                    None if enc is None else enc.shape)
             groups.setdefault(key, []).append(seq)
         group_list = list(groups.values())
@@ -149,13 +193,36 @@ def prefill_group(eng, model: str, pool: _SlotPool,
     G = len(group)
     b = AdaOperScheduler._new_bucket(G)
     pad = b - G
-    prompts = np.stack([s.req.prompt for s in group]
-                       + [group[0].req.prompt] * pad)
-    enc = None
-    if group[0].req.enc_inputs is not None:
-        enc = np.stack([s.req.enc_inputs for s in group]
-                       + [group[0].req.enc_inputs] * pad)
-    logits, g_cache = w.prefill_batch(prompts, enc)
+    lens = [len(s.req.prompt) for s in group]
+    plan_len = lens[0]
+    pad_mask = None
+    if ssm_prompt_bucketed(eng, w) and lens:
+        # pow2 prompt-length bucket: LEFT-pad every prompt to the group's
+        # shared bucket with a validity mask (the pad-safe SSM scan leaves
+        # masked positions out of the state entirely, so each row's cache
+        # matches its exact-length prefill); per-seq positions stay the
+        # true prompt lengths.
+        plan_len = AdaOperScheduler._len_bucket(max(lens))
+        if any(n != plan_len for n in lens):
+            padded = np.zeros((G, plan_len), np.int32)
+            mask = np.zeros((G, plan_len), bool)
+            for i, s in enumerate(group):
+                padded[i, plan_len - lens[i]:] = s.req.prompt
+                mask[i, plan_len - lens[i]:] = True
+            prompts = np.concatenate([padded, padded[:1].repeat(pad, 0)]) \
+                if pad else padded
+            pad_mask = np.concatenate([mask, mask[:1].repeat(pad, 0)]) \
+                if pad else mask
+            logits, g_cache = w.prefill_batch(prompts, None,
+                                              pad_mask=pad_mask)
+    if pad_mask is None:
+        prompts = np.stack([s.req.prompt for s in group]
+                           + [group[0].req.prompt] * pad)
+        enc = None
+        if group[0].req.enc_inputs is not None:
+            enc = np.stack([s.req.enc_inputs for s in group]
+                           + [group[0].req.enc_inputs] * pad)
+        logits, g_cache = w.prefill_batch(prompts, enc)
     slots = np.full(b, pool.alloc.n_slots, np.int32)  # pads drop
     slots[:G] = [s.slot for s in group]
     pool.cache = w.write_slots(pool.cache, g_cache, slots)
@@ -165,7 +232,9 @@ def prefill_group(eng, model: str, pool: _SlotPool,
         toks = [int(t) for t in np.asarray(jnp.argmax(logits[:G], -1))]
     pp = None
     if eng.scheduler is not None:
-        pp = eng._prefill_plan_for(model, G, len(group[0].req.prompt))
+        # bucketed SSM groups charge the bucket-length plan (same pow2 len
+        # bucket the planner keys on, so exact-length groups are unchanged)
+        pp = eng._prefill_plan_for(model, G, plan_len)
         eng.scheduler.sim.drain(pp["energy"] * G / pp["batch"])
         eng.ledger.emit(
             "prefill", pp["latency"],

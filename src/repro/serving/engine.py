@@ -51,7 +51,9 @@ class ServingEngine:
                  mode: str = "continuous", max_slots: int = 8,
                  slo_s: Optional[float] = None, sampling_seed: int = 0,
                  batch_prefill: bool = True, max_retries: int = 1,
-                 deadline_backoff: float = 1.5, shed_below_priority: int = 1):
+                 deadline_backoff: float = 1.5, shed_below_priority: int = 1,
+                 risk_level: Optional[float] = None,
+                 legacy_drift: bool = False, ssm_prompt_buckets: bool = True):
         if mode not in ("continuous", "bucketed"):
             raise ValueError(f"unknown serving mode {mode!r}; choose from "
                              "('continuous', 'bucketed')")
@@ -62,19 +64,23 @@ class ServingEngine:
         self.mode = mode
         self.max_slots = max_slots
         self.sampling_seed = sampling_seed
-        # batched admission: one bucketed prefill per same-shape group;
-        # False keeps the serial batch-1 reference path
+        # batched admission: one prefill per same-shape group; False = serial
         self.batch_prefill = batch_prefill
         self.prefill_batches = 0
         self.prefill_batch_requests = 0
-        # telemetry spine: shared with the device simulator when a
-        # scheduler is attached, a private ledger otherwise
+        # telemetry spine: the simulator's ledger when a scheduler is attached
         self.ledger: EnergyLedger = (
             scheduler.sim.ledger
             if scheduler is not None and hasattr(scheduler.sim, "ledger")
             else EnergyLedger())
-        self.admission = AdmissionPolicy(scheduler, slo_s=slo_s)
+        # uncertainty knobs (docs/uncertainty.md; defaults inert): risk_level
+        # prices admission at an interval upper quantile, legacy_drift pins
+        # the fixed hysteresis, ssm_prompt_buckets pow2-pads SSM admission
+        self.admission = AdmissionPolicy(scheduler, slo_s=slo_s,
+                                         risk_level=risk_level)
         self.admission.ledger = self.ledger
+        self.legacy_drift = legacy_drift
+        self.ssm_prompt_buckets = ssm_prompt_buckets
         self.pools: Dict[str, _SlotPool] = {}
         self.priorities: Dict[str, int] = {}
         self.preemptions: Dict[str, int] = {}
@@ -82,16 +88,13 @@ class ServingEngine:
         # drift-scoped step-plan memo (see repro.serving.planning)
         self._plan_memo: Dict = {}
         self._drift_ref = None
-        # graceful degradation (repro.serving.robustness): deadline timeout
-        # -> up to max_retries requeues with deadline * backoff, then an
-        # explicit error Response; under battery_critical, queued requests
-        # with priority below the floor are shed (also explicit errors)
+        # graceful degradation (repro.serving.robustness): deadline requeue
+        # with backoff then error Response; battery-critical priority shedding
         self.max_retries = max_retries
         self.deadline_backoff = deadline_backoff
         self.shed_below_priority = shed_below_priority
-        # virtual clock for trace-driven replay (run_trace): None => wall
-        # time; a float => waits read it and every planned prefill/decode
-        # step advances it by the predicted latency
+        # virtual clock for run_trace: None => wall time; a float advances
+        # by predicted prefill/decode latencies
         self._vtime: Optional[float] = None
 
     def _now(self) -> float:

@@ -183,6 +183,16 @@ class AdaOperScheduler:
             ent = pinned_partition(g, cost_fn, pinned)
         ent.rail_fractions = (self.sim.rail_fractions(g, ent.alphas)
                               if hasattr(self.sim, "rail_fractions") else None)
+        # risk-aware serving (repro.uncertainty): fresh solves are stamped
+        # with their calibrated (latency, energy) prediction interval so
+        # admission can price an upper quantile and the engine can trigger
+        # repartition on interval exit. None (no uncertainty model attached,
+        # or a bare cost callable) is the bit-identical inert default.
+        ent.interval = (cost_fn.plan_interval(g, ent.alphas)
+                        if getattr(self.profiler, "uncertainty", None)
+                        is not None and hasattr(cost_fn, "plan_interval")
+                        else None)
+        ent.graph = g
         self._plan_cache[key] = ent
         while len(self._plan_cache) > self.plan_cache_size:
             self._plan_cache.popitem(last=False)
@@ -208,10 +218,16 @@ class AdaOperScheduler:
         b = self._new_bucket(batch)
         seq = self._len_bucket(seq_len) + self._new_bucket(max_new)
         plan_dec = self._plan_one(cfg, b, seq, "decode", cost_fn, cache_key)
-        return {"batch": b,
-                "step_latency": plan_dec.pred_latency,
-                "step_energy": plan_dec.pred_energy,
-                "rails": plan_dec.rail_fractions}
+        out = {"batch": b,
+               "step_latency": plan_dec.pred_latency,
+               "step_energy": plan_dec.pred_energy,
+               "rails": plan_dec.rail_fractions}
+        if getattr(plan_dec, "interval", None) is not None:
+            # interval + the (graph, alphas) the engine re-prices to detect
+            # an interval exit; keys absent on the inert point-estimate path
+            out["interval"] = plan_dec.interval
+            out["recheck"] = (plan_dec.graph, plan_dec.alphas)
+        return out
 
     def prefill_plan(self, cfg, batch: int, seq_len: int):
         """Cached prefill plan for an admission (batch is pow2-bucketed)."""
@@ -221,8 +237,11 @@ class AdaOperScheduler:
         b = self._new_bucket(batch)
         plan = self._plan_one(cfg, b, self._len_bucket(seq_len), "prefill",
                               cost_fn, cache_key)
-        return {"batch": b, "latency": plan.pred_latency,
-                "energy": plan.pred_energy, "rails": plan.rail_fractions}
+        out = {"batch": b, "latency": plan.pred_latency,
+               "energy": plan.pred_energy, "rails": plan.rail_fractions}
+        if getattr(plan, "interval", None) is not None:
+            out["interval"] = plan.interval
+        return out
 
     def choose(self, cfg, n_waiting: int, prompt_len: int, max_new: int):
         obs = self.sim.observe()

@@ -112,18 +112,29 @@ class ModelWorker:
         return self.prefill_batch(
             prompt[None], None if enc_inputs is None else enc_inputs[None])
 
-    def prefill_batch(self, prompts: np.ndarray, enc_inputs=None):
+    def prefill_batch(self, prompts: np.ndarray, enc_inputs=None,
+                      pad_mask=None):
         """Batched admission prefill: ``prompts`` (G, S) equal-length (the
         caller pads G to a pow2 bucket). Returns (last-position logits (G,V),
         batch-G cache whose rows scatter into slots via ``write_slots``).
         Every op is row-independent, so each row is bit-identical to a
-        ``prefill_one`` of the same prompt."""
+        ``prefill_one`` of the same prompt.
+
+        ``pad_mask`` (G, S) bool marks the valid tokens of LEFT-padded
+        prompts bucketed to a shared length — pure-SSM stacks only (masked
+        positions neither write into nor decay the scan state, so the
+        resulting caches match exact-length prefill; see ``generate``)."""
         G = prompts.shape[0]
+        if pad_mask is not None and self.cfg.is_encoder_decoder:
+            raise ValueError("pad_mask is only supported for pure-SSM "
+                             "stacks, not encoder-decoder models")
         cache = model_lib.init_cache(self.cfg, G, self.max_len,
                                      enc_len=self.max_enc_len)
         args = (self.params, cache, jnp.asarray(prompts))
         if self.cfg.is_encoder_decoder:
             return self._prefill(*args, jnp.asarray(enc_inputs))
+        if pad_mask is not None:
+            return self._prefill(*args, pad_mask=jnp.asarray(pad_mask))
         return self._prefill(*args)
 
     def write_slot(self, pool_cache, one_cache, slot: int):

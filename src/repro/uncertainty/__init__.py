@@ -1,0 +1,13 @@
+"""Uncertainty-aware energy prediction + risk-aware control (docs/uncertainty.md).
+
+Quantile GBDT ensembles give the profiler's point predictions a
+heteroscedastic scale; online split-conformal calibration turns that scale
+into intervals with a guaranteed-coverage multiplier. Attached to a
+:class:`~repro.core.profiler.RuntimeEnergyProfiler` the intervals drive
+risk-aware admission, interval-stamped plans, and interval-triggered
+repartition; unattached, every existing code path is bit-identical.
+"""
+from repro.uncertainty.conformal import SplitConformal, conformal_quantile
+from repro.uncertainty.model import UncertaintyModel
+
+__all__ = ["SplitConformal", "UncertaintyModel", "conformal_quantile"]

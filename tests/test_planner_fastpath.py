@@ -301,6 +301,38 @@ def test_cost_table_cache_correction_invalidation(small_profiler):
     assert prof.table_cache.misses > m0, "correction update must miss"
 
 
+def test_cost_table_cache_eviction_is_lru():
+    """Explicit max-entries eviction order: the least-recently-*used* entry
+    goes first, where both get() and put() refresh recency."""
+    from repro.core.profiler import CostTableCache
+
+    g = object()
+    c = CostTableCache(max_entries=3)
+    for k in ("a", "b", "c"):
+        c.put(k, g, k.upper())
+    # touch "a" (oldest-inserted) via get: "b" is now least recently used
+    assert c.get("a", g) == "A"
+    c.put("d", g, "D")
+    assert c.get("b", g) is None, "LRU victim must be the untouched entry"
+    assert c.get("a", g) == "A"
+    assert len(c) == 3
+
+
+def test_cost_table_cache_put_refreshes_recency():
+    """Re-putting an existing key must move it to the MRU end, not leave it
+    in insertion position to be evicted as if stale."""
+    from repro.core.profiler import CostTableCache
+
+    g = object()
+    c = CostTableCache(max_entries=3)
+    for k in ("a", "b", "c"):
+        c.put(k, g, k.upper())
+    c.put("a", g, "A2")  # overwrite refreshes both value and recency
+    c.put("d", g, "D")   # evicts "b" (now the oldest), not "a"
+    assert c.get("a", g) == "A2"
+    assert c.get("b", g) is None
+
+
 def test_cost_table_cache_guards_graph_identity(small_profiler):
     """A recycled id() must not alias another graph's tables."""
     _, prof = small_profiler

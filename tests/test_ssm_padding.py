@@ -154,6 +154,39 @@ def test_ssd_scan_kernel_mask_matches_truncated():
                                rtol=1e-5, atol=1e-5)
 
 
+def test_engine_buckets_ssm_prompts_into_one_prefill(mamba2):
+    """Engine-level pow2 prompt bucketing: mixed-length SSM admissions in
+    the same length bucket prefill as ONE left-padded masked batch, with
+    tokens identical to per-request exact-length generation."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.slots import Request
+
+    cfg, params = mamba2
+    rng = np.random.default_rng(9)
+    reqs = [Request(i, rng.integers(1, cfg.vocab_size, plen, dtype=np.int32),
+                    4) for i, plen in enumerate((11, 13))]
+
+    def serve(buckets: bool):
+        eng = ServingEngine(mode="continuous", max_slots=4,
+                            ssm_prompt_buckets=buckets)
+        eng.add_model("m", cfg, params, max_len=48)
+        for r in reqs:
+            eng.submit("m", r)
+        res = eng.run_all()
+        return eng, {r.uid: r.tokens for r in res}
+
+    eng_b, got = serve(True)
+    # lengths 11 and 13 share the pow2 bucket -> one admission prefill
+    assert eng_b.prefill_batches == 1
+    eng_e, got_exact = serve(False)
+    assert eng_e.prefill_batches == 2  # exact-length grouping splits them
+    w = ModelWorker("ref", cfg, params, max_len=48)
+    for r in reqs:
+        ref = w.generate(r.prompt[None], r.max_new_tokens)[0]
+        np.testing.assert_array_equal(got[r.uid], ref)
+        np.testing.assert_array_equal(got_exact[r.uid], ref)
+
+
 def test_attention_stack_rejects_pad_mask():
     """Left padding shifts absolute (rope) positions, so attention stacks
     must refuse the mask loudly rather than silently mis-serve."""

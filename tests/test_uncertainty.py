@@ -1,0 +1,321 @@
+"""Uncertainty layer (repro.uncertainty): conformal math, calibrated
+coverage, cache invalidation, inert-by-default wiring and the risk-aware
+control paths (admission pricing, interval-triggered repartition)."""
+import numpy as np
+import pytest
+
+from repro.core import DeviceSim, RuntimeEnergyProfiler, build_yolo_graph
+from repro.core.controller import AdaOperController
+from repro.core.profiler import DeviceState, state_bucket
+from repro.core.telemetry import EnergyLedger
+from repro.uncertainty import SplitConformal, UncertaintyModel, conformal_quantile
+
+# ---------------------------------------------------------------------------
+# conformal math
+# ---------------------------------------------------------------------------
+
+
+def test_conformal_quantile_hand_computed():
+    scores = [3.0, 1.0, 2.0, 5.0, 4.0, 6.0, 8.0, 7.0, 9.0]  # n = 9
+    # k = ceil((9+1) * 0.8) = 8 -> 8th smallest of 1..9
+    assert conformal_quantile(scores, 0.8) == 8.0
+    # k = ceil(10 * 0.9) = 9 -> the maximum
+    assert conformal_quantile(scores, 0.9) == 9.0
+    # k = ceil(10 * 0.95) = 10 > n: not certifiable from 9 scores
+    assert conformal_quantile(scores, 0.95) is None
+    assert conformal_quantile([], 0.9) is None
+
+
+def test_split_conformal_commits_and_versions():
+    sc = SplitConformal(coverage=0.9, min_scores=24, q_default=2.0,
+                        recalib_every=16)
+    assert sc.quantile() == 2.0 and sc.version == 0
+    sc.observe(np.full(64, 5.0))
+    assert sc.quantile() == pytest.approx(5.0)
+    assert sc.version == 1
+    # hysteresis: a statistically-identical refresh must not bump again
+    v = sc.version
+    sc.observe(np.full(64, 5.0))
+    assert sc.version == v
+
+
+def test_split_conformal_bucket_falls_back_to_global():
+    sc = SplitConformal(coverage=0.9, min_scores=24, recalib_every=8)
+    sc.observe(np.full(40, 3.0))           # global ring commits 3.0
+    sc.observe(np.full(4, 1.0), bucket=("hot",))  # too few for the bucket
+    assert sc.quantile(("hot",)) == pytest.approx(3.0)
+    # once the bucket ring has enough scores it commits its own (lower)
+    # quantile; the global one — 90th pct of the mixed stream — stays put
+    sc.observe(np.full(60, 1.0), bucket=("hot",))
+    assert sc.quantile(("hot",)) == pytest.approx(1.0)
+    assert sc.quantile() == pytest.approx(3.0)
+
+
+def test_split_conformal_q_max_clamp():
+    sc = SplitConformal(coverage=0.9, min_scores=8, q_max=4.0,
+                        recalib_every=8)
+    sc.observe(np.full(32, 100.0))
+    assert sc.quantile() == 4.0
+
+
+# ---------------------------------------------------------------------------
+# quantile predictor: determinism + synthetic coverage
+# ---------------------------------------------------------------------------
+
+
+def _synthetic(seed, n=400):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (n, 4))
+    scale = 0.05 + 0.3 * X[:, 1]           # heteroscedastic noise
+    y_e = np.exp(X[:, 0]) + rng.normal(0, scale)
+    y_t = 1.0 + X[:, 2] + rng.normal(0, scale)
+    return X, np.abs(y_e), np.abs(y_t)
+
+
+def test_model_deterministic_across_identical_seeds():
+    X, ye, yt = _synthetic(0)
+    m1 = UncertaintyModel(seed=3).fit(X, ye, yt)
+    m2 = UncertaintyModel(seed=3).fit(X, ye, yt)
+    Xq = X[:32]
+    c = np.stack([m.predict(Xq) for m in m1._e_members]).mean(0)
+    lo1, hi1, _ = m1.interval_energy(Xq, c)
+    lo2, hi2, _ = m2.interval_energy(Xq, c)
+    assert np.array_equal(lo1, lo2) and np.array_equal(hi1, hi2)
+    assert m1.conformal_e.quantile() == m2.conformal_e.quantile()
+
+
+def test_model_synthetic_coverage_near_target():
+    X, ye, yt = _synthetic(1, n=600)
+    m = UncertaintyModel(seed=0, coverage=0.9).fit(X[:400], ye[:400], yt[:400])
+    # stream held-out batches prequentially, centered on the ensemble mean
+    for i in range(400, 600, 25):
+        Xb = X[i:i + 25]
+        ce = np.stack([mm.predict(Xb) for mm in m._e_members]).mean(0)
+        ct = np.stack([mm.predict(Xb) for mm in m._t_members]).mean(0)
+        m.observe_batch(Xb, ct, ce, yt[i:i + 25], ye[i:i + 25])
+    cov = m.empirical_coverage()
+    assert cov is not None and cov >= 0.80, cov
+    assert m.mean_width_j() > 0.0
+
+
+def test_fit_seeds_conformal_from_heldout_split():
+    X, ye, yt = _synthetic(2)
+    m = UncertaintyModel(seed=0)
+    assert m.conformal_e.n_scores() == 0
+    m.fit(X, ye, yt)
+    # half the trace is held out and scored into the calibrator at fit time
+    assert m.conformal_e.n_scores() == len(X) - len(X) // 2
+    assert m.conformal_e.quantile() != m.conformal_e.q_default or \
+        m.conformal_e.version >= 0  # quantile committed from data
+
+
+# ---------------------------------------------------------------------------
+# profiler wiring: inert default, cache invalidation, plan intervals
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def calibrated_pair():
+    """(unattached profiler, attached profiler) calibrated identically."""
+    g = build_yolo_graph()
+    plain = RuntimeEnergyProfiler(use_gru=False, seed=0)
+    plain.offline_calibrate([g], n_samples=500, seed=0)
+    unc = RuntimeEnergyProfiler(use_gru=False, seed=0)
+    unc.attach_uncertainty(UncertaintyModel(seed=0, n_estimators=30))
+    unc.offline_calibrate([g], n_samples=500, seed=0)
+    return g, plain, unc
+
+
+def test_unattached_profiler_is_inert(calibrated_pair):
+    g, plain, _ = calibrated_pair
+    obs = DeviceState(1.5, 0.5, 0.8, 0.1)
+    assert plain.predict_plan_interval(g, np.full(len(g), 0.5), obs) is None
+    assert plain.take_interval_outside() is None
+    assert plain.take_interval_stats() is None
+    assert plain.cost_fn(obs).plan_interval(g, np.full(len(g), 0.5)) is None
+
+
+def test_attached_point_predictions_identical(calibrated_pair):
+    """The quantile layer must not perturb the point predictions the whole
+    system plans with — same seed, same calibration, bit-equal outputs."""
+    g, plain, unc = calibrated_pair
+    obs = DeviceState(1.5, 0.5, 0.8, 0.1)
+    alphas = np.full(len(g), 0.5)
+    assert plain.predict_graph(g, alphas, obs) == unc.predict_graph(g, alphas, obs)
+
+
+def test_plan_interval_brackets_point_prediction(calibrated_pair):
+    g, _, unc = calibrated_pair
+    obs = DeviceState(1.5, 0.5, 0.8, 0.1)
+    alphas = np.full(len(g), 0.5)
+    iv = unc.predict_plan_interval(g, alphas, obs)
+    _, en = unc.predict_graph(g, alphas, obs)
+    lo, hi = iv["energy"]
+    assert lo <= en <= hi and lo < hi
+    lo_t, hi_t = iv["latency"]
+    assert lo_t < hi_t
+
+
+def test_cache_key_invalidates_on_calibration_bump(calibrated_pair):
+    g, _, unc = calibrated_pair
+    obs = DeviceState(1.5, 0.5, 0.8, 0.1)
+    key0 = unc.cost_fn(obs).cache_key()
+    v0 = unc.correction_version()
+    # flood the ring so the quantile materially moves (downward — robust
+    # even when the fit-time seeding already clamped q at q_max): the bump
+    # must invalidate every downstream cache key
+    unc.uncertainty.conformal_e.observe(np.full(300, 1e-3))
+    assert unc.correction_version() > v0
+    assert unc.cost_fn(obs).cache_key() != key0
+    assert unc.cost_fn(obs).cache_key()[0] == state_bucket(obs)
+
+
+# ---------------------------------------------------------------------------
+# risk-aware control: controller repartition trigger + admission pricing
+# ---------------------------------------------------------------------------
+
+
+def test_controller_interval_triggered_repartition():
+    """Degenerately narrow intervals (q clamped to ~0) force every
+    observation outside -> the interval trigger must repartition and the
+    ledger must carry the full counter set."""
+    g = build_yolo_graph()
+    prof = RuntimeEnergyProfiler(use_gru=False, seed=0)
+    prof.attach_uncertainty(UncertaintyModel(
+        seed=0, n_estimators=20, sigma_floor=1e-6, q_default=1e-6,
+        q_max=1e-6))
+    prof.offline_calibrate([g], n_samples=400, seed=0)
+    sim = DeviceSim("moderate", seed=4)
+    ctl = AdaOperController(sim, prof)
+    for _ in range(4):
+        ctl.run_inference(g)
+    c = sim.ledger.counters
+    assert c.get("interval_observations", 0) >= len(g) * 4
+    assert c.get("interval_repartitions", 0) >= 1
+    assert c.get("interval_covered", 0) < c["interval_observations"]
+    assert "interval_width_uj" in c
+
+
+def test_controller_legacy_drift_flag_ignores_intervals():
+    """legacy_drift=True keeps the fixed hysteresis even with a model
+    attached: the same narrow intervals must NOT trigger repartitions."""
+    g = build_yolo_graph()
+    prof = RuntimeEnergyProfiler(use_gru=False, seed=0)
+    prof.attach_uncertainty(UncertaintyModel(
+        seed=0, n_estimators=20, sigma_floor=1e-6, q_default=1e-6,
+        q_max=1e-6))
+    prof.offline_calibrate([g], n_samples=400, seed=0)
+    sim = DeviceSim("moderate", seed=4)
+    ctl = AdaOperController(sim, prof, legacy_drift=True,
+                            drift_threshold=1e9)  # hysteresis never trips
+    for _ in range(4):
+        ctl.run_inference(g)
+    assert sim.ledger.counters.get("interval_repartitions", 0) == 0
+    # coverage accounting still flows (it is observation, not control)
+    assert sim.ledger.counters.get("interval_observations", 0) > 0
+
+
+def _plan(lat, en, iv_lat=None, iv_en=None, batch=2):
+    p = {"batch": batch, "step_latency": lat, "step_energy": en}
+    if iv_lat is not None:
+        p["interval"] = {"latency": iv_lat, "energy": iv_en}
+    return p
+
+
+def test_admission_risk_pricing():
+    from repro.serving.admission import AdmissionPolicy
+
+    pol = AdmissionPolicy(scheduler=object(), slo_s=1.0, risk_level=1.0)
+    plan = _plan(0.01, 2.0, iv_lat=(0.005, 0.2), iv_en=(1.0, 3.0))
+    assert pol._risk(plan, "latency") == pytest.approx(0.2)
+    assert pol._risk(plan, "energy") == pytest.approx(3.0)
+    # half-way risk level sits between point and upper bound
+    pol.risk_level = 0.5
+    assert pol._risk(plan, "latency") == pytest.approx(0.01 + 0.5 * 0.19)
+    # no interval stamped -> point, regardless of risk level
+    assert pol._risk(_plan(0.01, 2.0), "latency") == 0.01
+    # risk_level=None is the exact point arithmetic
+    pol.risk_level = None
+    assert pol._risk(plan, "energy") == 2.0
+
+
+def test_admission_slo_rejects_on_upper_quantile():
+    """A plan whose point latency meets the SLO but whose calibrated upper
+    bound does not must be rejected under risk-aware admission and admitted
+    under point admission."""
+    from repro.serving.admission import AdmissionPolicy
+
+    plans = {2: _plan(0.004, 2.0, iv_lat=(0.002, 0.04), iv_en=(1.0, 3.0)),
+             3: _plan(0.005, 2.5, iv_lat=(0.003, 0.06), iv_en=(1.5, 3.5),
+                      batch=4)}
+    fn = lambda b: plans[b]  # noqa: E731
+    point = AdmissionPolicy(scheduler=object(), slo_s=1.0)
+    ok, reason = point.decide(None, 2, 64, 20, 0.0, plan_fn=fn)
+    assert ok, reason
+    risky = AdmissionPolicy(scheduler=object(), slo_s=1.0, risk_level=1.0)
+    ok, reason = risky.decide(None, 2, 64, 20, 0.0, plan_fn=fn)
+    assert not ok and reason == "slo-violation"
+
+
+# ---------------------------------------------------------------------------
+# engine drift: interval-exit replaces the fixed hysteresis
+# ---------------------------------------------------------------------------
+
+
+class _FakeProfiler:
+    def __init__(self, en):
+        self.en = en
+        self.uncertainty = object()  # attached marker
+
+    def correction_version(self):
+        return 7
+
+    def predict_graph(self, graph, alphas, obs):
+        return 0.0, self.en
+
+
+def _fake_engine(en, memo, legacy=False):
+    import types
+
+    sim = DeviceSim("moderate", seed=0)
+    sch = types.SimpleNamespace(sim=sim, profiler=_FakeProfiler(en))
+    return types.SimpleNamespace(scheduler=sch, _drift_ref=None,
+                                 _plan_memo=memo, drift_events=0,
+                                 ledger=EnergyLedger(), legacy_drift=legacy)
+
+
+def test_engine_drift_fires_on_interval_exit():
+    from repro.serving.planning import drift_event
+
+    memo = {"k": {"interval": {"energy": (0.5, 1.0)},
+                  "recheck": (None, [0.5])}}
+    eng = _fake_engine(en=2.0, memo=memo)       # re-priced outside [0.5, 1]
+    assert drift_event(eng) is False            # first call sets the ref
+    assert drift_event(eng) is True
+    assert eng.ledger.counters.get("interval_repartitions") == 1
+    assert len(eng._plan_memo) == 0
+
+
+def test_engine_drift_quiet_inside_interval():
+    from repro.serving.planning import drift_event
+
+    memo = {"k": {"interval": {"energy": (0.5, 5.0)},
+                  "recheck": (None, [0.5])}}
+    eng = _fake_engine(en=2.0, memo=memo)       # 2.0 inside [0.5, 5.0]
+    drift_event(eng)
+    assert drift_event(eng) is False
+    assert eng.ledger.counters.get("interval_repartitions", 0) == 0
+    assert len(eng._plan_memo) == 1
+
+
+def test_engine_legacy_drift_ignores_intervals():
+    from repro.serving.planning import drift_event
+
+    memo = {"k": {"interval": {"energy": (0.5, 1.0)},
+                  "recheck": (None, [0.5])}}
+    eng = _fake_engine(en=2.0, memo=memo, legacy=True)
+    drift_event(eng)
+    # same state, same version: the hysteresis path sees no drift even
+    # though the interval check would have fired
+    assert drift_event(eng) is False
+    assert eng.ledger.counters.get("interval_repartitions", 0) == 0
