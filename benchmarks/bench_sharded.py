@@ -1,0 +1,260 @@
+"""Sharded serving benchmark: 1-vs-N host-device throughput and energy.
+
+``PYTHONPATH=src python -m benchmarks.bench_sharded
+    [--json BENCH_sharded.json] [--smoke]``
+
+Runs the same fixed serving trace twice, each arm in its own subprocess so
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` lands before jax
+imports: once unsharded (``mesh=None``, the bit-exactness reference) and
+once under an 8-way tensor-parallel debug mesh. The workers shard params
+and caches through ``repro.sharding.partition_specs`` and the planner
+stamps every plan with the collective term from ``repro.sharding.comm`` —
+so the two arms together are the AdaOper "speedup != energy win" plot at
+chip scale: the sharded arm's virtual-time throughput goes *up* while its
+energy/request and bus-rail share go up with it.
+
+Asserted every run (not just against the baseline):
+
+* both arms serve every request of the trace;
+* the sharded arm's bus-rail energy share exceeds the unsharded arm's
+  (the collective energy is attributed, not lost);
+* the sharded arm's energy/request is >= the unsharded arm's (tensor
+  parallelism never *saves* energy here — compute joules are conserved
+  and the collectives are pure overhead);
+* the sharded arm's throughput beats the unsharded arm's (the speedup
+  half of the tradeoff).
+
+The smoke gate (``benchmarks/run.py --smoke`` / CI ``sharded-smoke``) then
+pins both arms against ``benchmarks/baselines/BENCH_sharded.json``: exact
+request/token counts (the virtual-time replay is deterministic in the
+seed) and energy/request + throughput within ``SHARDED_TOL``. A missing or
+corrupt baseline fails with the exact regeneration command.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.baseline_gate import BASELINE_DIR, fleet_regen_cmd, load_baseline
+
+BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_sharded.json")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the two arms: unsharded reference vs 8-way tensor parallel on the host
+# platform (the forced-device-count trick CI and the slow tests use)
+SHARD_ARMS = (1, 8)
+HOST_DEVICES = 8
+
+# fixed reduced-config trace; every number below is part of the baseline's
+# identity, so changing any of them requires regenerating BENCH_sharded.json
+SHARDED_SMOKE = dict(model="tinyllama-1.1b", n_requests=6, prompt_len=16,
+                     max_new=8, arrival_gap_s=0.002, max_slots=4, max_len=64,
+                     calib=350, seed=0)
+# relative tolerance for energy/request and throughput vs the baseline
+# (virtual time is deterministic; the slack absorbs cost-model retunes)
+SHARDED_TOL = 0.05
+CHILD_TIMEOUT_S = 570
+
+
+# ----------------------------------------------------------------------
+# child: one serving arm (runs with XLA_FLAGS already in the environment)
+# ----------------------------------------------------------------------
+
+def child_run(shards: int) -> dict:
+    import numpy as np
+
+    from repro.configs.base import get_config, reduced
+    from repro.core.opgraph import build_transformer_graph
+    from repro.core.profiler import RuntimeEnergyProfiler
+    from repro.core.simulator import DeviceSim
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models.model import init_params
+    from repro.serving.engine import AdaOperScheduler, Request, ServingEngine
+    from repro.sharding import comm
+    from repro.sharding.context import ExecContext
+
+    import jax
+
+    c = SHARDED_SMOKE
+    cfg = reduced(get_config(c["model"]))
+    params = init_params(jax.random.PRNGKey(c["seed"]), cfg)
+    prof = RuntimeEnergyProfiler(use_gru=False)
+    prof.offline_calibrate(
+        [build_transformer_graph(cfg, 2, c["prompt_len"] + c["max_new"])],
+        n_samples=c["calib"], seed=c["seed"])
+    sim = DeviceSim("moderate", seed=c["seed"])
+    eng = ServingEngine(scheduler=AdaOperScheduler(prof, sim),
+                        mode="continuous", max_slots=c["max_slots"],
+                        sampling_seed=c["seed"])
+    if shards > 1:
+        ctx = ExecContext(mesh=make_debug_mesh(1, shards),
+                          batch_axes=("data",), model_axis="model")
+    else:
+        ctx = ExecContext()
+    eng.add_model("llm", cfg, params, max_len=c["max_len"], ctx=ctx)
+
+    rng = np.random.default_rng(c["seed"])
+    arrivals = []
+    for uid in range(c["n_requests"]):
+        prompt = rng.integers(1, cfg.vocab_size, c["prompt_len"],
+                              dtype=np.int32)
+        arrivals.append((uid * c["arrival_gap_s"], "llm",
+                         Request(uid, prompt,
+                                 max_new_tokens=c["max_new"])))
+    t_arr = {r.uid: t for t, _, r in arrivals}
+    res = [r for r in eng.run_trace(arrivals) if r.error is None]
+
+    n_tokens = int(sum(len(r.tokens) for r in res))
+    makespan = max(t_arr[r.uid] + r.latency_s for r in res)
+    cpu = sum(r.rails.cpu_j for r in res)
+    gpu = sum(r.rails.gpu_j for r in res)
+    bus = sum(r.rails.bus_j for r in res)
+    total = cpu + gpu + bus
+    # the per-axis collective stamp at the pool's decode shape — what the
+    # planner priced into every step plan (None on the unsharded arm)
+    term = comm.comm_term(cfg, ctx, c["max_slots"], 1)
+    return {
+        "shards": shards,
+        "n_requests": len(res),
+        "n_tokens": n_tokens,
+        "makespan_s": float(makespan),
+        "throughput_tok_s": n_tokens / makespan,
+        "latency_s_mean": float(np.mean([r.latency_s for r in res])),
+        "energy_per_request_j": float(np.mean([r.energy_j_pred for r in res])),
+        "rails_j": {"cpu": cpu, "gpu": gpu, "bus": bus},
+        "bus_fraction": bus / total if total > 0 else 0.0,
+        "comm": term,
+        # recorded, not gated: GSPMD may legally reorder reductions
+        "tokens_checksum": int(sum(int(r.tokens.astype(np.int64).sum())
+                                   for r in res)),
+        "shard_report": None if eng.workers["llm"].shard_report is None else {
+            "params_sharded": eng.workers["llm"].shard_report.sharded,
+            "params_replicated": eng.workers["llm"].shard_report.replicated,
+        },
+    }
+
+
+def _spawn_arm(shards: int, emit=print) -> dict:
+    """Run one arm in a subprocess with the host-device override staged
+    before jax import; the child prints one JSON line on stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                        f"--xla_force_host_platform_device_count={HOST_DEVICES}"
+                        ).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(_REPO_ROOT, "src"),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sharded",
+         "--child", str(shards)],
+        cwd=_REPO_ROOT, env=env, capture_output=True, text=True,
+        timeout=CHILD_TIMEOUT_S)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench child (shards={shards}) failed "
+            f"rc={proc.returncode}\nstdout:\n{proc.stdout}\n"
+            f"stderr:\n{proc.stderr[-4000:]}")
+    line = proc.stdout.strip().splitlines()[-1]
+    arm = json.loads(line)
+    emit(f"sharded_arm,,shards={shards};"
+         f"tok_s={arm['throughput_tok_s']:.1f};"
+         f"energy_mJ_per_req={arm['energy_per_request_j']*1e3:.3f};"
+         f"bus_frac={arm['bus_fraction']:.4f}")
+    return arm
+
+
+# ----------------------------------------------------------------------
+# parent: both arms, invariants, baseline gate
+# ----------------------------------------------------------------------
+
+def gate_sharded(out: dict, baseline_path: str = BASELINE_PATH) -> None:
+    """Pin both arms against the committed baseline: exact request/token
+    counts, energy/request and throughput within ``SHARDED_TOL``. All
+    failures are reported in one message (one CI round-trip)."""
+    regen = fleet_regen_cmd(baseline_path)
+    base = load_baseline(baseline_path, regen)
+    failures = []
+    for key, arm in out["arms"].items():
+        b = base["arms"].get(key)
+        if b is None:
+            failures.append(f"baseline has no arm {key!r}")
+            continue
+        for k in ("n_requests", "n_tokens"):
+            if arm[k] != b[k]:
+                failures.append(
+                    f"arm {key}: {k} diverged — replay no longer "
+                    f"deterministic: {arm[k]} vs baseline {b[k]}")
+        for k in ("energy_per_request_j", "throughput_tok_s"):
+            if abs(arm[k] - b[k]) > SHARDED_TOL * abs(b[k]):
+                failures.append(
+                    f"arm {key}: {k} drifted >{SHARDED_TOL:.0%}: "
+                    f"{arm[k]:.4e} vs baseline {b[k]:.4e}")
+    if failures:
+        lines = "\n".join(f"  - {f}" for f in failures)
+        raise AssertionError(
+            f"sharded[1v{max(SHARD_ARMS)}]: {len(failures)} gate failure(s) "
+            f"vs {baseline_path}\n{lines}\n"
+            f"If the change is intentional, regenerate with:\n    {regen}")
+
+
+def smoke_run(json_path: str = None, smoke: bool = True,
+              baseline_path: str = BASELINE_PATH, emit=print) -> dict:
+    arms = {str(n): _spawn_arm(n, emit=emit) for n in SHARD_ARMS}
+    one, many = arms["1"], arms[str(max(SHARD_ARMS))]
+
+    n_req = SHARDED_SMOKE["n_requests"]
+    for key, arm in arms.items():
+        assert arm["n_requests"] == n_req, (
+            f"arm {key} served {arm['n_requests']}/{n_req} requests")
+    assert many["bus_fraction"] > one["bus_fraction"], (
+        f"sharded bus share {many['bus_fraction']:.4f} does not exceed "
+        f"unsharded {one['bus_fraction']:.4f} — the collective energy was "
+        f"not attributed to the bus rail")
+    assert many["energy_per_request_j"] >= one["energy_per_request_j"], (
+        f"sharded energy/request {many['energy_per_request_j']:.4e} J fell "
+        f"below unsharded {one['energy_per_request_j']:.4e} J — collectives "
+        f"are overhead, tensor parallelism must not look like an energy win")
+    assert many["throughput_tok_s"] > one["throughput_tok_s"], (
+        f"sharded throughput {many['throughput_tok_s']:.1f} tok/s does not "
+        f"beat unsharded {one['throughput_tok_s']:.1f} tok/s")
+    assert many["comm"] is not None and many["comm"]["energy_j"] > 0.0, (
+        "sharded arm carries no collective term — the planner did not "
+        "stamp the comm model onto its plans")
+
+    out = {"config": dict(SHARDED_SMOKE), "arms": arms,
+           "speedup": many["throughput_tok_s"] / one["throughput_tok_s"],
+           "energy_overhead": (many["energy_per_request_j"]
+                               / one["energy_per_request_j"] - 1.0)}
+    emit(f"sharded_1v{max(SHARD_ARMS)},,speedup={out['speedup']:.3f};"
+         f"energy_overhead={out['energy_overhead']:.4f};"
+         f"bus_frac_1={one['bus_fraction']:.4f};"
+         f"bus_frac_{max(SHARD_ARMS)}={many['bus_fraction']:.4f}")
+    if json_path:
+        with open(json_path, "w") as fp:
+            json.dump(out, fp, indent=2, sort_keys=True)
+    if smoke:
+        gate_sharded(out, baseline_path)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_sharded.json",
+                    help="output JSON path (both arms + derived ratios)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate against the committed baseline")
+    ap.add_argument("--child", type=int, default=None, metavar="SHARDS",
+                    help="internal: run one arm and print its JSON")
+    args = ap.parse_args(argv)
+    if args.child is not None:
+        print(json.dumps(child_run(args.child)))
+        return None
+    return smoke_run(json_path=args.json, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ import os
 
 from benchmarks import bench_fleet
 from benchmarks.baseline_gate import BASELINE_DIR, gate_fleet
+from repro.core.opgraph import OP_TYPES
 
 BASELINE_PATH = os.path.join(BASELINE_DIR, "BENCH_uncertainty.json")
 
@@ -84,6 +85,16 @@ def smoke_run(json_path: str = None, smoke: bool = True,
          f"slo_point={pf['slo_attainment']:.3f};"
          f"energy_mJ_per_req_unc={uf['energy_per_request_j']*1e3:.3f};"
          f"energy_mJ_per_req_point={pf['energy_per_request_j']*1e3:.3f}")
+    # per-op-class prequential coverage from the (state bucket, op class)
+    # conformal keying — the fleet counters carry (obs, covered) per class
+    per_cls = []
+    for t in OP_TYPES:
+        n = uf["counters"].get(f"interval_obs_{t}", 0)
+        if n:
+            c_cov = uf["counters"].get(f"interval_cov_{t}", 0)
+            per_cls.append(f"{t}={c_cov / n:.3f}({n})")
+    if per_cls:
+        emit("uncertainty_coverage_per_class,," + ";".join(per_cls))
 
     if json_path:
         with open(json_path, "w") as fp:

@@ -29,7 +29,7 @@ import os
 import time
 
 SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent", "coexec", "fleet",
-                  "uncertainty")
+                  "uncertainty", "sharded")
 
 
 def main(argv=None) -> None:
@@ -37,7 +37,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated sections (fig2,concurrent,coexec,"
                          "profiler,partitioner,kernels,roofline,fleet,"
-                         "uncertainty)")
+                         "uncertainty,sharded)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced fast-section run with loud fast-path asserts")
     ap.add_argument("--json-dir", default=".",
@@ -54,7 +54,7 @@ def main(argv=None) -> None:
     else:
         sections = set((args.only or
                         "fig2,concurrent,coexec,profiler,partitioner,"
-                        "kernels,roofline,fleet,uncertainty")
+                        "kernels,roofline,fleet,uncertainty,sharded")
                        .split(","))
     t0 = time.time()
 
@@ -114,6 +114,11 @@ def main(argv=None) -> None:
         from benchmarks import bench_uncertainty
         bench_uncertainty.smoke_run(json_path=jp("BENCH_uncertainty.json"),
                                     smoke=args.smoke)
+    if "sharded" in sections:
+        banner("Sharded serving: 1-vs-8 shard throughput + energy/request")
+        from benchmarks import bench_sharded
+        bench_sharded.smoke_run(json_path=jp("BENCH_sharded.json"),
+                                smoke=args.smoke)
     if "kernels" in sections:
         banner("Pallas kernels (interpret-mode regression)")
         from benchmarks import bench_kernels

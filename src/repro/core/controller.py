@@ -205,6 +205,11 @@ class AdaOperController:
             self.sim.ledger.count("interval_observations", unc_stats["n"])
             self.sim.ledger.count("interval_covered", unc_stats["covered"])
             self.sim.ledger.count("interval_width_uj", unc_stats["width_uj"])
+            # per-op-class coverage from the (state bucket, op class)
+            # conformal keying — fleet reports surface these when nonzero
+            for cls, (cn, cc) in unc_stats.get("by_class", {}).items():
+                self.sim.ledger.count(f"interval_obs_{cls}", cn)
+                self.sim.ledger.count(f"interval_cov_{cls}", cc)
         outside = self.profiler.take_interval_outside()
         interval_mode = outside is not None and not self.legacy_drift
         if interval_mode:

@@ -305,8 +305,9 @@ class RuntimeEnergyProfiler:
             static_block=graph.static_feature_matrix()[:len(alphas)])
         lat, en = self._predict_xy(X)
         bucket = state_bucket(obs_state)
-        lo_e, hi_e, _ = unc.interval_energy(X, en, bucket)
-        lo_t, hi_t, _ = unc.interval_latency(X, lat, bucket)
+        classes = [op.op_type for op in graph.nodes[:len(alphas)]]
+        lo_e, hi_e, _ = unc.interval_energy(X, en, bucket, classes)
+        lo_t, hi_t, _ = unc.interval_latency(X, lat, bucket, classes)
         return {"latency": (float(lo_t.sum()), float(hi_t.sum())),
                 "energy": (float(lo_e.sum()), float(hi_e.sum()))}
 
@@ -355,10 +356,13 @@ class RuntimeEnergyProfiler:
         drift = np.abs(np.asarray(observed_ens) - gb_e * ce) / np.maximum(gb_e * ce, 1e-12)
         if self.uncertainty is not None:
             # prequential interval accounting + online conformal update,
-            # centered on the same corrected predictions decisions use
+            # centered on the same corrected predictions decisions use;
+            # keyed per (state bucket, op class) so each operator class
+            # calibrates its own quantile
             self.uncertainty.observe_batch(
                 X, gb_t * ct, gb_e * ce, observed_lats, observed_ens,
-                bucket=state_bucket(obs_state))
+                bucket=state_bucket(obs_state),
+                op_classes=[op.op_type for op in ops])
         for j in range(len(items)):
             self._record(X[j], float(gb_e[j]), float(gb_t[j]),
                          float(observed_lats[j]), float(observed_ens[j]))

@@ -29,7 +29,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.controller import AdaOperController
-from repro.core.opgraph import OpGraph, build_transformer_graph, build_yolo_graph
+from repro.core.opgraph import OP_TYPES, OpGraph, build_transformer_graph, build_yolo_graph
 from repro.core.profiler import RuntimeEnergyProfiler
 from repro.core.telemetry import EnergyBreakdown
 from repro.faults import FaultError, FaultInjector, FaultPlan, chaos_plan
@@ -50,9 +50,14 @@ _ROBUST_COUNTER_KEYS = ("faults", "recoveries", "fault_replans", "op_retries",
 
 # uncertainty counters (repro.uncertainty), surfaced only when nonzero like
 # the robustness set: runs without an attached uncertainty model keep the
-# pre-uncertainty report schema byte-for-byte
-_UNCERTAINTY_COUNTER_KEYS = ("interval_observations", "interval_covered",
-                             "interval_width_uj", "interval_repartitions")
+# pre-uncertainty report schema byte-for-byte; the per-op-class pairs come
+# from the conformal model's (state bucket, op class) keying, so fleet
+# reports expose coverage per operator class, not just in aggregate
+_UNCERTAINTY_COUNTER_KEYS = (
+    ("interval_observations", "interval_covered",
+     "interval_width_uj", "interval_repartitions")
+    + tuple(f"interval_obs_{t}" for t in OP_TYPES)
+    + tuple(f"interval_cov_{t}" for t in OP_TYPES))
 
 
 def _require_models(trace: Trace, known, backend: str) -> None:
@@ -101,7 +106,7 @@ class DeviceReplay:
                  serving_models: Optional[Dict[str, tuple]] = None,
                  max_slots: int = 4, fault_plan: Optional[FaultPlan] = None,
                  joint: bool = False, uncertainty: bool = False,
-                 risk_level: Optional[float] = None):
+                 risk_level: Optional[float] = None, serving_ctx=None):
         if backend not in ("graph", "serving"):
             raise ValueError(f"unknown replay backend {backend!r}; choose "
                              "from ('graph', 'serving')")
@@ -145,8 +150,16 @@ class DeviceReplay:
                                            coexec=self.coexec),
                 mode="continuous", max_slots=max_slots,
                 sampling_seed=profile.seed, risk_level=risk_level)
+            # serving_ctx: a shared ExecContext (e.g. a model-parallel
+            # mesh) applied to every worker — replayed fleets then price
+            # tensor-parallel collectives through the same comm term as
+            # the live engine; None keeps the single-device default
             for name, (cfg, params) in (serving_models or {}).items():
-                self.engine.add_model(name, cfg, params, max_len=64)
+                if serving_ctx is not None:
+                    self.engine.add_model(name, cfg, params, max_len=64,
+                                          ctx=serving_ctx)
+                else:
+                    self.engine.add_model(name, cfg, params, max_len=64)
 
     def _set_resident_graphs(self, trace: Trace) -> None:
         """Declare the trace's distinct graph-path models as the
@@ -379,7 +392,7 @@ class FleetReplay:
                  serving_models: Optional[Dict[str, tuple]] = None,
                  rate_scale: float = 1.0, max_slots: int = 4,
                  joint: bool = False, uncertainty: bool = False,
-                 risk_level: Optional[float] = None):
+                 risk_level: Optional[float] = None, serving_ctx=None):
         self.population = population
         self.scenario = scenario
         self.duration_s = duration_s
@@ -398,6 +411,9 @@ class FleetReplay:
         # (repro.uncertainty); False stays bit-identical to point estimates
         self.uncertainty = uncertainty
         self.risk_level = risk_level
+        # shared ExecContext for every device's serving workers (sharded
+        # fleet replays); None keeps the single-device default
+        self.serving_ctx = serving_ctx
 
     def device_trace(self, idx: int) -> Trace:
         return make_trace(self.scenario, self.duration_s,
@@ -424,7 +440,8 @@ class FleetReplay:
                               serving_models=self.serving_models,
                               max_slots=self.max_slots, joint=self.joint,
                               uncertainty=self.uncertainty,
-                              risk_level=self.risk_level)
+                              risk_level=self.risk_level,
+                              serving_ctx=self.serving_ctx)
             records, counters = dr.run(trace)
             devices.append(dr.metrics(records, counters))
             all_latencies.extend(r.latency_s for r in records)

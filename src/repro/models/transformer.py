@@ -283,6 +283,26 @@ def apply_stack(stage_params, cfg, x, ctx, mode, cache=None, pos=0,
                 fn = jax.checkpoint(body)
         else:
             fn = body
+        pipe = ctx.plan.get("pipeline") if hasattr(ctx, "plan") else None
+        if (pipe and mode == "train" and sc is None
+                and int(pipe.get("stages", 0)) > 1
+                and st.repeats % int(pipe["stages"]) == 0
+                and x.shape[0] % int(pipe.get("microbatches", 1)) == 0):
+            # circular pipeline parallelism over this stage's stacked layers
+            # (repro.sharding.pipeline, maxtext rotation idiom); cacheless
+            # train mode only — the scan below stays the reference path
+            from repro.sharding.pipeline import circular_pipeline
+
+            def stage_fn(group, xmb):
+                (y, a), _ = jax.lax.scan(
+                    fn, (xmb, jnp.zeros((), jnp.float32)), group)
+                return y, a
+
+            x, aux = circular_pipeline(stage_fn, sp, x, int(pipe["stages"]),
+                                       int(pipe.get("microbatches", 1)))
+            aux_total = aux_total + aux
+            new_caches.append(None)
+            continue
         xs = (sp, sc) if sc is not None else sp
         (x, aux_total), c_new = jax.lax.scan(fn, (x, aux_total), xs)
         new_caches.append(c_new)

@@ -6,8 +6,18 @@ prefill plans are memoised on the engine between drift events, and a drift
 event (device-state move past the hysteresis thresholds, or a profiler
 correction-version bump) clears the memo — the scheduler's own caches key
 on the new state, so subsequent queries replan automatically.
+Sharded workers (an ExecContext with a model-parallel mesh) additionally
+stamp every memoised plan with the per-axis communication term from
+``repro.sharding.comm``: compute latency divides by the shard count, the
+tensor-parallel collective traffic adds back on the critical path, and its
+transfer energy lands on the plan's bus-rail fraction — so the ledger
+prices the AdaOper "speedup != energy win" signal at chip scale. A
+``model_parallel == 1`` context (mesh=None or a 1-device mesh) returns the
+scheduler's plan object unchanged, bit-identically.
 """
 from __future__ import annotations
+
+from repro.sharding import comm
 
 # hysteresis thresholds for drift events, sized ~4 sigma above the resource
 # monitor's observation noise: genuine governor moves and background bursts
@@ -24,8 +34,13 @@ def step_plan_for(eng, model: str, batch: int, seq_len: int, max_new: int):
            sch._new_bucket(max_new))
     plan = eng._plan_memo.get(key)
     if plan is None:
-        plan = eng._plan_memo[key] = sch.step_plan(
-            eng.workers[model].cfg, batch, seq_len, max_new)
+        w = eng.workers[model]
+        plan = sch.step_plan(w.cfg, batch, seq_len, max_new)
+        # one decode step moves (bucketed-batch, 1 token) of activations
+        plan = comm.shard_plan(
+            plan, comm.comm_term(w.cfg, w.ctx, plan["batch"], 1),
+            "step_energy", "step_latency")
+        eng._plan_memo[key] = plan
     return plan
 
 
@@ -36,8 +51,13 @@ def prefill_plan_for(eng, model: str, batch: int, prompt_len: int):
     key = ("pre", model, sch._new_bucket(batch), sch._len_bucket(prompt_len))
     plan = eng._plan_memo.get(key)
     if plan is None:
-        plan = eng._plan_memo[key] = sch.prefill_plan(
-            eng.workers[model].cfg, batch, prompt_len)
+        w = eng.workers[model]
+        plan = sch.prefill_plan(w.cfg, batch, prompt_len)
+        plan = comm.shard_plan(
+            plan, comm.comm_term(w.cfg, w.ctx, plan["batch"],
+                                 sch._len_bucket(prompt_len)),
+            "energy", "latency")
+        eng._plan_memo[key] = plan
     return plan
 
 

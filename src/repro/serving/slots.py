@@ -106,6 +106,14 @@ class _SlotPool:
 
     def __init__(self, worker, max_slots: int):
         self.cache = worker.init_pool(max_slots)
+        # mesh-aware pools record their cache region's NamedSharding tree
+        # (batch rows -> data axes, kv-heads -> model with the KV-sequence
+        # fallback; see repro.sharding.partition_specs.cache_spec) so tests
+        # and benches can introspect placement; None on the single-device
+        # path, which allocates exactly as before
+        self.cache_shardings = (
+            worker._cache_shardings.get((max_slots, worker.max_enc_len))
+            if worker.mesh is not None else None)
         self.alloc = SlotAllocator(max_slots)
         self.active: Dict[int, _ActiveSeq] = {}
         self.tokens = np.zeros((max_slots, 1), np.int32)

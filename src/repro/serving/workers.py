@@ -1,9 +1,19 @@
 """Per-model serving worker: jitted prefill/decode against a preallocated
 KV/state cache, batch generation (bucketed reference path) and the
 slot-pool primitives the continuous engine drives.
+
+Sharded serving: when the :class:`~repro.sharding.context.ExecContext`
+carries a mesh, the worker builds NamedShardings for its params via the
+``repro.sharding.partition_specs`` rule table at construction (recording
+replication decisions on ``shard_report``), places every cache it
+allocates under the activation rules, and the jitted prefill/decode run
+under GSPMD with the donated sharded caches. ``mesh=None`` (the default)
+takes the identical single-device code path — the bit-exactness reference,
+token-identical to a 1-device mesh (``tests/test_sharded_serving.py``).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -28,11 +38,51 @@ class ModelWorker:
         # this length; decoder-only models carry no encoder region
         self.max_enc_len = (max_enc_len if max_enc_len is not None
                             else (max_len if cfg.is_encoder_decoder else 0))
+        # mesh-aware placement: shard params once per worker, caches per
+        # (batch, enc_len) shape as they are allocated; shard_report tallies
+        # the rule table's sharded-vs-replicated decisions for telemetry
+        self.mesh = ctx.mesh
+        self.shard_report = None
+        self._cache_shardings: dict = {}
+        if self.mesh is not None:
+            from repro.sharding import partition_specs as ps
+            self._ps = ps
+            self._model_axis = ctx.model_axis or "model"
+            self._batch_axes = tuple(ctx.batch_axes) or ("data",)
+            self.shard_report = ps.ShardingReport()
+            shardings = ps.params_shardings(
+                jax.eval_shape(lambda p: p, params), cfg, self.mesh,
+                model_axis=self._model_axis, batch_axes=self._batch_axes,
+                report=self.shard_report)
+            self.params = jax.device_put(params, shardings)
+            self.param_shardings = shardings
+        else:
+            self.param_shardings = None
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._write = jax.jit(model_lib.write_cache_slot, donate_argnums=(0,))
         self._write_many = jax.jit(model_lib.write_cache_slots,
                                    donate_argnums=(0,))
+
+    def _new_cache(self, batch: int, enc_len: int):
+        """Allocate a cache and, under a mesh, place it by the activation
+        rules (batch -> data axes, kv-heads -> model with the KV-sequence
+        fallback). The mesh=None path returns the allocation untouched."""
+        cache = model_lib.init_cache(self.cfg, batch, self.max_len,
+                                     enc_len=enc_len)
+        if self.mesh is None:
+            return cache
+        key = (batch, enc_len)
+        sh = self._cache_shardings.get(key)
+        if sh is None:
+            sds = jax.eval_shape(functools.partial(
+                model_lib.init_cache, self.cfg, batch, self.max_len,
+                enc_len=enc_len))
+            sh = self._cache_shardings[key] = self._ps.cache_shardings(
+                sds, self.cfg, self.mesh, batch,
+                model_axis=self._model_axis, batch_axes=self._batch_axes,
+                report=self.shard_report)
+        return jax.device_put(cache, sh)
 
     def _prefill_impl(self, params, cache, tokens, enc_inputs=None,
                       pad_mask=None):
@@ -68,7 +118,7 @@ class ModelWorker:
             raise ValueError("pad_mask is only supported for pure-SSM "
                              "stacks, not encoder-decoder models")
         enc_len = enc_inputs.shape[1] if enc_inputs is not None else 0
-        cache = model_lib.init_cache(self.cfg, B, self.max_len, enc_len=enc_len)
+        cache = self._new_cache(B, enc_len)
         args = (self.params, cache, jnp.asarray(prompts))
         if self.cfg.is_encoder_decoder:
             logits, cache = self._prefill(*args, jnp.asarray(enc_inputs))
@@ -102,9 +152,10 @@ class ModelWorker:
 
     def init_pool(self, max_slots: int):
         """Preallocated KV/state cache with one row per request slot (plus a
-        ``max_enc_len`` encoder cross-attention region for enc-dec models)."""
-        return model_lib.init_cache(self.cfg, max_slots, self.max_len,
-                                    enc_len=self.max_enc_len)
+        ``max_enc_len`` encoder cross-attention region for enc-dec models),
+        placed under the activation sharding rules when the worker carries
+        a mesh."""
+        return self._new_cache(max_slots, self.max_enc_len)
 
     def prefill_one(self, prompt: np.ndarray, enc_inputs=None):
         """Prefill a single request at its exact length. Returns
@@ -128,8 +179,7 @@ class ModelWorker:
         if pad_mask is not None and self.cfg.is_encoder_decoder:
             raise ValueError("pad_mask is only supported for pure-SSM "
                              "stacks, not encoder-decoder models")
-        cache = model_lib.init_cache(self.cfg, G, self.max_len,
-                                     enc_len=self.max_enc_len)
+        cache = self._new_cache(G, self.max_enc_len)
         args = (self.params, cache, jnp.asarray(prompts))
         if self.cfg.is_encoder_decoder:
             return self._prefill(*args, jnp.asarray(enc_inputs))

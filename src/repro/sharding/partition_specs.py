@@ -12,29 +12,87 @@ MaxText-style rules keyed on parameter path + shape:
 
 Activation / cache rules:
   * batch -> ('pod','data') when divisible, else KV-sequence -> 'data'
-  * kv heads -> 'model' when divisible, else head_dim -> 'model'
+  * kv heads -> 'model' when divisible, else KV-sequence -> 'model'
+    (flash-decode style partial softmax)
+
+Replication is a *decision*, not a silent default: every dim that wanted a
+mesh axis but was not divisible by it is recorded on the caller's
+:class:`ShardingReport` and logged, so an 8-way mesh that quietly
+replicates half the model is visible in one summary line (serving workers
+keep the report as ``worker.shard_report``; ``bench_sharded`` surfaces the
+counts).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import logging
+from dataclasses import dataclass, field
+from typing import List, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+_log = logging.getLogger(__name__)
+
 FSDP_THRESHOLD = 8e9  # params
 
 
+@dataclass
+class ShardingReport:
+    """Tally of sharding decisions for one params/cache tree.
+
+    ``sharded`` counts (leaf, dim) pairs that took a mesh axis;
+    ``replicated`` counts pairs that *wanted* one but were not divisible by
+    it (``events`` keeps ``(path, dim, size, axis)`` for each). Dims no
+    rule ever targets are not decisions and are not counted."""
+    sharded: int = 0
+    replicated: int = 0
+    events: List[Tuple[str, int, int, str]] = field(default_factory=list)
+
+    def record(self, path: str, dim: int, size: int, axis, ok: bool) -> None:
+        if ok:
+            self.sharded += 1
+        else:
+            self.replicated += 1
+            self.events.append((path, dim, int(size),
+                                "+".join(axis) if isinstance(axis, tuple)
+                                else str(axis)))
+
+    def log_summary(self, label: str) -> None:
+        if self.replicated:
+            sample = "; ".join(
+                f"{p}[dim {d}]={n} !% {a}" for p, d, n, a in self.events[:4])
+            _log.info(
+                "%s: %d dims sharded, %d replicated (not divisible by their "
+                "mesh axis): %s%s", label, self.sharded, self.replicated,
+                sample, " ..." if len(self.events) > 4 else "")
+        else:
+            _log.debug("%s: %d dims sharded, 0 replicated", label,
+                       self.sharded)
+
+
+def _axis_size(mesh, axis) -> int:
+    return int(np.prod([mesh.shape[a]
+                        for a in (axis if isinstance(axis, tuple) else (axis,))]))
+
+
 def _div(n, mesh, axis) -> bool:
-    return axis is not None and n % int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))])) == 0
+    return axis is not None and n % _axis_size(mesh, axis) == 0
 
 
-def _maybe(n, mesh, axis):
-    return axis if _div(n, mesh, axis) else None
+def _maybe(n, mesh, axis, report=None, path="", dim=0):
+    """The one replication point: ``axis`` when ``n`` divides the mesh axis
+    product, else ``None`` (replicate) — recorded on ``report``."""
+    if axis is None:
+        return None
+    ok = _div(n, mesh, axis)
+    if report is not None:
+        report.record(path, dim, n, axis, ok)
+    return axis if ok else None
 
 
 def param_spec(path: str, shape: Tuple[int, ...], mesh, model_axis="model",
-               fsdp_axes=None) -> P:
+               fsdp_axes=None, report=None) -> P:
     """Rule table. ``path`` is the '/'-joined pytree path."""
     m = model_axis
     f = fsdp_axes
@@ -43,31 +101,34 @@ def param_spec(path: str, shape: Tuple[int, ...], mesh, model_axis="model",
         return P()
     leaf = path.split("/")[-1]
 
+    def mb(dim, axis):
+        return _maybe(shape[dim], mesh, axis, report, path, dim)
+
     if leaf in ("embedding", "lm_head"):
         if leaf == "embedding":  # (V, D)
-            return P(_maybe(shape[0], mesh, m), _maybe(shape[1], mesh, f))
-        return P(_maybe(shape[0], mesh, f), _maybe(shape[1], mesh, m))  # (D, V)
+            return P(mb(0, m), mb(1, f))
+        return P(mb(0, f), mb(1, m))  # (D, V)
     if leaf in ("wq", "wk", "wv", "w_gate", "w_up", "wi") and nd == 2:
-        return P(_maybe(shape[0], mesh, f), _maybe(shape[1], mesh, m))
+        return P(mb(0, f), mb(1, m))
     if leaf in ("wo", "w_down", "out_proj") and nd == 2:
-        return P(_maybe(shape[0], mesh, m), _maybe(shape[1], mesh, f))
+        return P(mb(0, m), mb(1, f))
     if leaf == "w_dkv":  # (D, lr+rope)
-        return P(_maybe(shape[0], mesh, f), None)
+        return P(mb(0, f), None)
     if leaf == "w_ukv":  # (lr, H, nope+vd)
-        return P(None, _maybe(shape[1], mesh, m), None)
+        return P(None, mb(1, m), None)
     if leaf == "router":
         return P(None, None)
     if "mlp" in path and nd == 3:  # moe experts (E,D,F)/(E,F,D)
         if leaf in ("w_gate", "w_up"):
-            return P(_maybe(shape[0], mesh, m), None, _maybe(shape[2], mesh, f))
+            return P(mb(0, m), None, mb(2, f))
         if leaf == "w_down":
-            return P(_maybe(shape[0], mesh, m), _maybe(shape[1], mesh, f), None)
+            return P(mb(0, m), mb(1, f), None)
     if leaf in ("in_proj", "x_proj", "dt_proj") and nd == 2:  # ssm projections
-        return P(_maybe(shape[0], mesh, f), _maybe(shape[1], mesh, m))
+        return P(mb(0, f), mb(1, m))
     if leaf == "conv_w":
-        return P(_maybe(shape[0], mesh, m), None)
+        return P(mb(0, m), None)
     if nd >= 2 and min(shape[-2:]) >= 1024:  # misc large matrices: fsdp
-        return P(*([None] * (nd - 2) + [_maybe(shape[-2], mesh, f), None]))
+        return P(*([None] * (nd - 2) + [mb(nd - 2, f), None]))
     return P(*([None] * nd))
 
 
@@ -76,11 +137,16 @@ def _stacked(spec: P, extra_lead: int) -> P:
     return P(*([None] * extra_lead + list(spec)))
 
 
+def fsdp_default(cfg) -> bool:
+    """FSDP on by default for models past the bf16-bytes threshold."""
+    return cfg.param_count() * 2 >= FSDP_THRESHOLD
+
+
 def params_shardings(params_sds, cfg, mesh, model_axis="model", batch_axes=("data",),
-                     fsdp: bool = None):
+                     fsdp: bool = None, report: ShardingReport = None):
     """Build a NamedSharding pytree matching ``params_sds`` (eval_shape tree)."""
     if fsdp is None:
-        fsdp = cfg.param_count() * 2 >= FSDP_THRESHOLD  # bytes heuristic @bf16
+        fsdp = fsdp_default(cfg)
     fsdp_axes = tuple(batch_axes) if fsdp else None
 
     def one(path_tuple, leaf):
@@ -95,12 +161,16 @@ def params_shardings(params_sds, cfg, mesh, model_axis="model", batch_axes=("dat
         # stage params are scan-stacked: leading dim = repeats
         lead = 1 if "stages" in keys and len(shape) >= 1 else 0
         core_shape = shape[lead:]
-        spec = param_spec(path, core_shape, mesh, model_axis, fsdp_axes)
+        spec = param_spec(path, core_shape, mesh, model_axis, fsdp_axes,
+                          report=report)
         if lead:
             spec = _stacked(spec, lead)
         return NamedSharding(mesh, spec)
 
-    return jax.tree_util.tree_map_with_path(one, params_sds)
+    out = jax.tree_util.tree_map_with_path(one, params_sds)
+    if report is not None:
+        report.log_summary(f"params[{getattr(cfg, 'name', '?')}]")
+    return out
 
 
 def batch_shardings(cfg, mesh, shape_kind, batch_axes=("data",)):
@@ -111,34 +181,51 @@ def batch_shardings(cfg, mesh, shape_kind, batch_axes=("data",)):
                if cfg.is_encoder_decoder else {})}
 
 
+def cache_spec(name: str, shape: Tuple[int, ...], mesh, batch_ok: bool,
+               model_axis="model", batch_axes=("data",), report=None) -> P:
+    """Activation-rule PartitionSpec for one cache leaf (pure function of
+    the leaf name + shape, so the rule table is unit-testable without
+    devices). ``batch_ok`` says the pool batch divides the batch axes."""
+    ba = tuple(batch_axes)
+    b_spec = ba if batch_ok else None
+    seq_axis = None if batch_ok else "data"
+    if name in ("k", "v", "xk", "xv"):  # (R,B,S,Hkv,Dh)
+        hkv = shape[-2]
+        h_spec = _maybe(hkv, mesh, model_axis, report, name, len(shape) - 2)
+        # kv_heads < TP width: shard the KV SEQUENCE on 'model' instead
+        # (flash-decode style partial-softmax) — head_dim sharding makes
+        # XLA all-gather the whole cache per layer (§Perf hillclimb 1).
+        s_spec = seq_axis if h_spec is not None else (seq_axis or model_axis)
+        return P(None, b_spec, s_spec, h_spec, None)
+    if name in ("c_kv", "k_rope"):  # (R,B,S,r)
+        return P(None, b_spec, seq_axis,
+                 _maybe(shape[-1], mesh, model_axis, report, name,
+                        len(shape) - 1) if name == "c_kv" else None)
+    if name == "ssm":  # (R,B,H,P,N) or (R,B,di,N)
+        return P(None, b_spec,
+                 _maybe(shape[2], mesh, model_axis, report, name, 2),
+                 *([None] * (len(shape) - 3)))
+    if name == "conv":  # (R,B,W-1,C)
+        return P(None, b_spec, None,
+                 _maybe(shape[-1], mesh, model_axis, report, name,
+                        len(shape) - 1))
+    return P(*([None] * len(shape)))
+
+
 def cache_shardings(cache_sds, cfg, mesh, batch, model_axis="model",
-                    batch_axes=("data",)):
+                    batch_axes=("data",), report: ShardingReport = None):
     """KV/state-cache sharding per the activation rules."""
     bp = int(np.prod([mesh.shape[a] for a in batch_axes]))
     batch_ok = batch % bp == 0
-    ba = tuple(batch_axes)
-    seq_axis = None if batch_ok else "data"
 
     def one(path_tuple, leaf):
         name = str(path_tuple[-1].key) if hasattr(path_tuple[-1], "key") else ""
-        shape = leaf.shape  # leading repeat dim from stacking
-        b_spec = ba if batch_ok else None
-        if name in ("k", "v", "xk", "xv"):  # (R,B,S,Hkv,Dh)
-            hkv, dh = shape[-2], shape[-1]
-            h_spec = _maybe(hkv, mesh, model_axis)
-            # kv_heads < TP width: shard the KV SEQUENCE on 'model' instead
-            # (flash-decode style partial-softmax) — head_dim sharding makes
-            # XLA all-gather the whole cache per layer (§Perf hillclimb 1).
-            s_spec = seq_axis if h_spec is not None else (seq_axis or model_axis)
-            return NamedSharding(mesh, P(None, b_spec, s_spec, h_spec, None))
-        if name in ("c_kv", "k_rope"):  # (R,B,S,r)
-            return NamedSharding(mesh, P(None, b_spec, seq_axis,
-                                         _maybe(shape[-1], mesh, model_axis) if name == "c_kv" else None))
-        if name == "ssm":  # (R,B,H,P,N) or (R,B,di,N)
-            return NamedSharding(mesh, P(None, b_spec, _maybe(shape[2], mesh, model_axis),
-                                         *([None] * (len(shape) - 3))))
-        if name == "conv":  # (R,B,W-1,C)
-            return NamedSharding(mesh, P(None, b_spec, None, _maybe(shape[-1], mesh, model_axis)))
-        return NamedSharding(mesh, P(*([None] * len(shape))))
+        spec = cache_spec(name, leaf.shape, mesh, batch_ok,
+                          model_axis=model_axis, batch_axes=batch_axes,
+                          report=report)
+        return NamedSharding(mesh, spec)
 
-    return jax.tree_util.tree_map_with_path(one, cache_sds)
+    out = jax.tree_util.tree_map_with_path(one, cache_sds)
+    if report is not None:
+        report.log_summary(f"cache[{getattr(cfg, 'name', '?')} b={batch}]")
+    return out

@@ -1,0 +1,78 @@
+"""Circular pipeline parallelism over scan-stacked layers (prototype).
+
+Follows the maxtext ``pipeline_shard.py`` microbatch-rotation idiom: the
+batch splits into M microbatches, the stage's L stacked layers split into S
+contiguous stage groups, and a buffer of per-stage activations rotates one
+slot per tick — stage 0 ingests microbatch t while stage S-1 emits
+microbatch t-(S-1), so after the S-1-tick warm-up every stage computes
+every tick. All stages run inside one ``jax.vmap`` over the stage axis; on
+a mesh with a ``stage`` axis that vmap shards into truly parallel stage
+programs — on one device it is the exact sequential arithmetic reordered,
+which is what the equivalence tests pin.
+
+Enabled per-model via ``ExecContext.plan["pipeline"] = {"stages": S,
+"microbatches": M}`` (``repro.models.transformer.apply_stack`` consults it
+for train-mode stacks whose repeat count divides S); absent, the scan path
+is untouched — the bit-exactness reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_stages(stage_params, n_stages: int):
+    """Reshape (L, ...) stacked layer params into (S, L//S, ...) stage
+    groups of contiguous layers."""
+    def one(a):
+        L = a.shape[0]
+        if L % n_stages:
+            raise ValueError(
+                f"{L} stacked layers do not divide into {n_stages} stages")
+        return a.reshape((n_stages, L // n_stages) + a.shape[1:])
+    return jax.tree.map(one, stage_params)
+
+
+def circular_pipeline(stage_fn, stage_params, x, n_stages: int,
+                      n_microbatches: int):
+    """Run ``x`` through all stacked layers via microbatch rotation.
+
+    ``stage_fn(group_params, x_mb) -> (x_mb, aux)`` applies one stage's
+    contiguous layer group (leading dim L//S); ``stage_params`` leaves are
+    (L, ...); ``x`` is (B, ...) with B divisible by ``n_microbatches``.
+    Returns ``(y, aux_sum)`` — y equivalent to sequential application, aux
+    summed over real (non-warm-up-bubble) stage executions only.
+    """
+    S, M = int(n_stages), int(n_microbatches)
+    B = x.shape[0]
+    if B % M:
+        raise ValueError(f"batch {B} does not divide into {M} microbatches")
+    mb = B // M
+    groups = split_stages(stage_params, S)
+    xs = x.reshape((M, mb) + x.shape[1:])
+    # per-stage activation buffer; row s holds the microbatch currently at
+    # stage s (zeros until the pipeline warms up)
+    state = jnp.zeros((S, mb) + x.shape[1:], x.dtype)
+    vfn = jax.vmap(stage_fn)
+    outputs = []
+    aux_total = jnp.zeros((), jnp.float32)
+    stage_idx = jnp.arange(S)
+    for t in range(M + S - 1):
+        # rotate: stage s takes stage s-1's previous output; stage 0 takes
+        # microbatch t (a zero bubble once the trace drains)
+        feed = xs[t] if t < M else jnp.zeros_like(xs[0])
+        state = jnp.concatenate([feed[None], state[:-1]], axis=0)
+        state, aux = vfn(groups, state)
+        # stage s is computing real data at tick t iff 0 <= t - s < M;
+        # bubble ticks run on zeros and must not pollute the aux loss
+        active = ((t - stage_idx) >= 0) & ((t - stage_idx) < M)
+        aux_total = aux_total + jnp.where(active, aux, 0.0).sum()
+        if t >= S - 1:
+            outputs.append(state[-1])
+    y = jnp.stack(outputs).reshape(x.shape)
+    return y, aux_total
+
+
+def pipeline_ticks(n_stages: int, n_microbatches: int) -> int:
+    """Total rotation ticks: M real waves + S-1 warm-up/drain bubbles."""
+    return n_microbatches + n_stages - 1

@@ -4,8 +4,10 @@ The quantile predictor (``repro.uncertainty.model``) turns ensemble spread
 into a per-op scale sigma(x); this module calibrates the *multiplier* q so
 that intervals ``mu(x) +/- q * sigma(x)`` hit a target coverage on held-out
 observations. Scores ``s_i = |y_i - mu(x_i)| / sigma(x_i)`` stream in from
-the profiler's online feedback into bounded ring buffers (one per quantized
-device-state bucket plus a global fallback), and q is the finite-sample
+the profiler's online feedback into bounded ring buffers (one per
+(quantized device-state bucket, op class) key plus a global fallback —
+attention and conv residuals calibrate separately under the same device
+state), and q is the finite-sample
 conformal quantile: the ``ceil((n+1) * coverage)``-th order statistic of
 the n most recent scores.
 
@@ -100,17 +102,33 @@ class SplitConformal:
         q = self._q_buckets.get(bucket) if bucket is not None else None
         return q if q is not None else self._q_global
 
-    def observe(self, scores, bucket=None) -> None:
+    def _ring_for(self, key) -> _Ring:
+        ring = self._buckets.get(key)
+        if ring is None:
+            ring = self._buckets[key] = _Ring(self.capacity)
+        return ring
+
+    def observe(self, scores, bucket=None, buckets=None) -> None:
+        """Append nonconformity scores. ``bucket`` routes the whole batch to
+        one ring; ``buckets`` (a per-row sequence of hashable keys, same
+        length as ``scores``) routes each score to its own ring — the
+        (state bucket, op class) keying the profiler uses, so a matmul's
+        residual never widens a conv's interval. Every score also feeds the
+        global ring (the fallback quantile)."""
         xs = np.atleast_1d(np.asarray(scores, np.float64))
-        ring = None
-        if bucket is not None:
-            ring = self._buckets.get(bucket)
-            if ring is None:
-                ring = self._buckets[bucket] = _Ring(self.capacity)
-        for x in xs:
-            self._global.append(float(x))
-            if ring is not None:
-                ring.append(float(x))
+        if buckets is not None:
+            if len(buckets) != len(xs):
+                raise ValueError(
+                    f"buckets has {len(buckets)} keys for {len(xs)} scores")
+            for x, key in zip(xs, buckets):
+                self._global.append(float(x))
+                self._ring_for(key).append(float(x))
+        else:
+            ring = self._ring_for(bucket) if bucket is not None else None
+            for x in xs:
+                self._global.append(float(x))
+                if ring is not None:
+                    ring.append(float(x))
         self._since_recalib += len(xs)
         if self._since_recalib >= self.recalib_every:
             self._since_recalib = 0

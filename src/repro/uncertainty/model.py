@@ -62,8 +62,12 @@ class UncertaintyModel:
         self.n_obs = 0
         self.n_covered = 0
         self.width_sum_j = 0.0
+        # cumulative per-op-class coverage tallies (populated when callers
+        # pass op_classes — the (state bucket, op class) conformal keying)
+        self.class_obs: Dict[str, int] = {}
+        self.class_cov: Dict[str, int] = {}
         self._pending_outside: Optional[np.ndarray] = None
-        self._pending_stats: Optional[Dict[str, int]] = None
+        self._pending_stats: Optional[Dict] = None
 
     # ------------------------------------------------------------------
     def fitted(self) -> bool:
@@ -119,38 +123,63 @@ class UncertaintyModel:
         return np.maximum(P.std(axis=0),
                           self.sigma_floor * np.maximum(center, 1e-12))
 
-    def interval_energy(self, X, center, bucket=None
+    @staticmethod
+    def _row_keys(bucket, op_classes, n: int):
+        """Per-row conformal keys: ``(state bucket, op class)`` when
+        ``op_classes`` is given (each op's residual calibrates its own
+        ring), else ``None`` — callers fall through to the single-bucket
+        path bit-identically."""
+        if op_classes is None:
+            return None
+        if len(op_classes) != n:
+            raise ValueError(
+                f"op_classes has {len(op_classes)} entries for {n} rows")
+        return [(bucket, c) for c in op_classes]
+
+    def _q_rows(self, conformal: SplitConformal, bucket, op_classes, n: int):
+        keys = self._row_keys(bucket, op_classes, n)
+        if keys is None:
+            return conformal.quantile(bucket)
+        return np.array([conformal.quantile(k) for k in keys], np.float64)
+
+    def interval_energy(self, X, center, bucket=None, op_classes=None
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(lo, hi, sigma) per row: ``center +/- q_hat * sigma`` clamped to
         non-negative energies. ``center`` is the profiler's corrected point
         prediction — the interval brackets the number decisions actually
-        use."""
+        use. ``op_classes`` keys each row's quantile on its
+        ``(state bucket, op class)`` ring (global fallback until the ring
+        certifies)."""
         center = np.asarray(center, np.float64)
         sig = self._sigma(self._e_members, X, center)
-        q = self.conformal_e.quantile(bucket)
+        q = self._q_rows(self.conformal_e, bucket, op_classes, len(center))
         return np.maximum(center - q * sig, 0.0), center + q * sig, sig
 
-    def interval_latency(self, X, center, bucket=None
+    def interval_latency(self, X, center, bucket=None, op_classes=None
                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         center = np.asarray(center, np.float64)
         sig = self._sigma(self._t_members, X, center)
-        q = self.conformal_t.quantile(bucket)
+        q = self._q_rows(self.conformal_t, bucket, op_classes, len(center))
         return np.maximum(center - q * sig, 0.0), center + q * sig, sig
 
     # ------------------------------------------------------------------
     def observe_batch(self, X, pred_lat, pred_en, obs_lat, obs_en,
-                      bucket=None) -> None:
+                      bucket=None, op_classes=None) -> None:
         """One inference batch of (prediction, ground truth) pairs from the
         profiler's feedback path. Prequential order: coverage is judged with
-        the quantile in force *now*, then the scores update the calibrator."""
+        the quantile in force *now*, then the scores update the calibrator.
+        ``op_classes`` (one op-type string per row) switches the conformal
+        keying to ``(state bucket, op class)`` and tallies coverage per
+        class (``coverage_per_class`` / ``take_stats()['by_class']``)."""
         if not self.fitted():
             return
         pred_en = np.asarray(pred_en, np.float64)
         pred_lat = np.asarray(pred_lat, np.float64)
         obs_en = np.asarray(obs_en, np.float64)
         obs_lat = np.asarray(obs_lat, np.float64)
-        lo_e, hi_e, sig_e = self.interval_energy(X, pred_en, bucket)
-        _, _, sig_t = self.interval_latency(X, pred_lat, bucket)
+        lo_e, hi_e, sig_e = self.interval_energy(X, pred_en, bucket,
+                                                 op_classes)
+        _, _, sig_t = self.interval_latency(X, pred_lat, bucket, op_classes)
         covered = (obs_en >= lo_e) & (obs_en <= hi_e)
         n, n_cov = len(obs_en), int(covered.sum())
         width = hi_e - lo_e
@@ -162,10 +191,24 @@ class UncertaintyModel:
         # integer counters (fleet reports derive the mean back out)
         self._pending_stats = {"n": n, "covered": n_cov,
                                "width_uj": int(round(width.sum() * 1e6))}
+        if op_classes is not None:
+            by_class: Dict[str, list] = {}
+            for c, cov in zip(op_classes, covered):
+                cn = by_class.setdefault(c, [0, 0])
+                cn[0] += 1
+                cn[1] += int(cov)
+            for c, (cn, cc) in by_class.items():
+                self.class_obs[c] = self.class_obs.get(c, 0) + cn
+                self.class_cov[c] = self.class_cov.get(c, 0) + cc
+            self._pending_stats["by_class"] = {
+                c: tuple(v) for c, v in by_class.items()}
+        keys = self._row_keys(bucket, op_classes, n)
         self.conformal_e.observe(np.abs(obs_en - pred_en)
-                                 / np.maximum(sig_e, 1e-12), bucket)
+                                 / np.maximum(sig_e, 1e-12), bucket,
+                                 buckets=keys)
         self.conformal_t.observe(np.abs(obs_lat - pred_lat)
-                                 / np.maximum(sig_t, 1e-12), bucket)
+                                 / np.maximum(sig_t, 1e-12), bucket,
+                                 buckets=keys)
 
     def take_outside(self) -> Optional[np.ndarray]:
         """Per-op outside-interval mask of the last observed batch (the
@@ -182,6 +225,12 @@ class UncertaintyModel:
     # ------------------------------------------------------------------
     def empirical_coverage(self) -> Optional[float]:
         return self.n_covered / self.n_obs if self.n_obs else None
+
+    def coverage_per_class(self) -> Dict[str, float]:
+        """Cumulative prequential coverage per op class (empty unless
+        callers stream ``op_classes`` through ``observe_batch``)."""
+        return {c: self.class_cov.get(c, 0) / n
+                for c, n in sorted(self.class_obs.items()) if n}
 
     def mean_width_j(self) -> Optional[float]:
         return self.width_sum_j / self.n_obs if self.n_obs else None

@@ -1,0 +1,235 @@
+"""Sharded serving: mesh-of-1 bit-identity vs the unsharded reference,
+the collective cost model / plan re-pricing, and the 1-vs-2-shard
+end-to-end subprocess run (device-count override before jax import)."""
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import DeviceSim, RuntimeEnergyProfiler, build_transformer_graph
+from repro.launch.mesh import make_debug_mesh
+from repro.models import init_params
+from repro.serving.engine import AdaOperScheduler, Request, ServingEngine
+from repro.sharding import comm
+from repro.sharding.context import ExecContext
+
+REQS = [(8, 4), (12, 3), (8, 2), (10, 4)]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def prof(tiny):
+    cfg, _ = tiny
+    p = RuntimeEnergyProfiler(use_gru=False)
+    p.offline_calibrate([build_transformer_graph(cfg, 2, 24)],
+                        n_samples=400, seed=0)
+    return p
+
+
+def _mesh1_ctx():
+    """A real 1-device mesh: the sharded code path (device_put params +
+    caches under NamedShardings, comm stamping consulted) at N=1 — must be
+    token- and ledger-identical to ``mesh=None``."""
+    return ExecContext(mesh=make_debug_mesh(1, 1), batch_axes=("data",),
+                       model_axis="model")
+
+
+def _requests(cfg, seed=5):
+    r = np.random.default_rng(seed)
+    return [Request(i, r.integers(1, cfg.vocab_size, plen, dtype=np.int32), mn)
+            for i, (plen, mn) in enumerate(REQS)]
+
+
+def _engine(tiny, prof, ctx, mode="continuous"):
+    cfg, params = tiny
+    sim = DeviceSim("moderate", seed=0)
+    eng = ServingEngine(scheduler=AdaOperScheduler(prof, sim), mode=mode,
+                        max_slots=4, sampling_seed=7)
+    eng.add_model("m", cfg, params, max_len=32, ctx=ctx)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# collective cost model + plan re-pricing (pure functions, no devices)
+# ---------------------------------------------------------------------------
+
+
+def test_comm_term_none_below_two_shards():
+    cfg = SimpleNamespace(d_model=64, num_layers=2, dtype="float32")
+    assert comm.comm_term(cfg, ExecContext(), 4, 1) is None
+    assert comm.comm_term(
+        cfg, SimpleNamespace(model_parallel=1), 4, 1) is None
+
+
+def test_comm_term_ring_allreduce_accounting():
+    cfg = SimpleNamespace(d_model=64, num_layers=2, dtype="float32")
+    ctx = SimpleNamespace(model_parallel=4, model_axis="model",
+                          batch_axes=("data",))
+    term = comm.comm_term(cfg, ctx, batch=4, tokens_per_row=2)
+    payload = 4 * 2 * 64 * 4  # B * T * d_model * bytes
+    per_chip = 2 * cfg.num_layers * 2.0 * (4 - 1) / 4 * payload
+    assert term["n_shards"] == 4
+    assert term["bytes_per_chip"] == pytest.approx(per_chip)
+    assert term["per_axis_bytes"]["model"] == pytest.approx(per_chip)
+    assert term["per_axis_bytes"]["data"] == 0.0  # DP: no inference traffic
+    assert term["latency_s"] == pytest.approx(
+        per_chip / (comm.ICI_GBPS * 1e9)
+        + 2 * cfg.num_layers * comm.COLLECTIVE_SYNC_S)
+    assert term["energy_j"] == pytest.approx(
+        per_chip * 4 * comm.ICI_PJ_PER_BYTE * 1e-12)
+
+
+def test_shard_plan_none_term_returns_same_object():
+    plan = {"batch": 4, "step_energy": 1.0, "step_latency": 0.1,
+            "rails": (0.2, 0.7, 0.1)}
+    assert comm.shard_plan(plan, None, "step_energy", "step_latency") is plan
+
+
+def test_shard_plan_reprices_latency_energy_and_bus_rail():
+    cfg = SimpleNamespace(d_model=64, num_layers=2, dtype="float32")
+    ctx = SimpleNamespace(model_parallel=8, model_axis="model",
+                          batch_axes=("data",))
+    term = comm.comm_term(cfg, ctx, 4, 1)
+    plan = {"batch": 4, "step_energy": 1e-3, "step_latency": 1e-2,
+            "rails": (0.2, 0.7, 0.1)}
+    out = comm.shard_plan(plan, term, "step_energy", "step_latency")
+    assert out is not plan and plan["step_energy"] == 1e-3  # input untouched
+    # compute latency divides by N, collectives add back on the critical path
+    assert out["step_latency"] == pytest.approx(
+        1e-2 / 8 + term["latency_s"])
+    # compute joules conserved, collective joules pure overhead
+    assert out["step_energy"] == pytest.approx(1e-3 + term["energy_j"])
+    assert out["step_energy"] > plan["step_energy"]
+    # rails renormalised: still a distribution, bus share strictly up
+    assert sum(out["rails"]) == pytest.approx(1.0)
+    assert out["rails"][2] > plan["rails"][2]
+    assert out["comm"] is term
+
+
+# ---------------------------------------------------------------------------
+# mesh-of-1 == unsharded, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _run_trace(eng, cfg, temperature=0.0):
+    arrivals = [(0.01 * i, "m", r) for i, r in enumerate(_requests(cfg))]
+    res = eng.run_trace(arrivals, temperature=temperature)
+    return {r.uid: r for r in res}
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8],
+                         ids=["greedy", "sampled"])
+def test_mesh_of_one_token_and_ledger_identity(tiny, prof, temperature):
+    cfg, _ = tiny
+    eng0 = _engine(tiny, prof, ExecContext())
+    eng1 = _engine(tiny, prof, _mesh1_ctx())
+    assert eng1.workers["m"].mesh is not None  # sharded code path taken
+    r0 = _run_trace(eng0, cfg, temperature)
+    r1 = _run_trace(eng1, cfg, temperature)
+    assert set(r0) == set(r1) == set(range(len(REQS)))
+    for uid in r0:
+        assert np.array_equal(r0[uid].tokens, r1[uid].tokens), uid
+        assert r0[uid].latency_s == r1[uid].latency_s
+        assert r0[uid].energy_j_pred == r1[uid].energy_j_pred
+    # ledger totals identical: no plan was re-priced at one shard
+    e0, e1 = eng0.ledger.total_energy(), eng1.ledger.total_energy()
+    assert e0.total_j == e1.total_j
+    assert e0.bus_j == e1.bus_j
+    assert all("comm" not in p for p in eng1._plan_memo.values())
+
+
+def test_mesh_of_one_bucketed_identity(tiny, prof):
+    cfg, _ = tiny
+    out = {}
+    for key, ctx in (("none", ExecContext()), ("mesh1", _mesh1_ctx())):
+        eng = _engine(tiny, prof, ctx, mode="bucketed")
+        for r in _requests(cfg):
+            eng.submit("m", r)
+        res = []
+        while any(eng.queues.values()):
+            res.extend(eng.step("m"))
+        out[key] = {r.uid: r.tokens for r in res}
+    assert set(out["none"]) == set(out["mesh1"])
+    for uid in out["none"]:
+        assert np.array_equal(out["none"][uid], out["mesh1"][uid])
+
+
+def test_mesh_of_one_slot_pool_cache_identity(tiny):
+    """The pool cache a meshed worker allocates holds the same bytes as the
+    unsharded worker's after identical prefill+write traffic."""
+    from repro.serving.engine import ModelWorker
+
+    cfg, params = tiny
+    w0 = ModelWorker("a", cfg, params, max_len=32, ctx=ExecContext())
+    w1 = ModelWorker("b", cfg, params, max_len=32, ctx=_mesh1_ctx())
+    assert w1.param_shardings is not None and w0.param_shardings is None
+    prompts = np.arange(1, 17, dtype=np.int32).reshape(2, 8)
+    for w in (w0, w1):
+        pool = w.init_pool(4)
+        _, cache = w.prefill_batch(prompts)
+        w._pool_state = w.write_slots(pool, cache, np.array([0, 2]))
+    for a, b in zip(jax.tree.leaves(w0._pool_state),
+                    jax.tree.leaves(w1._pool_state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slot_pool_exposes_cache_shardings(tiny):
+    from repro.serving.engine import ModelWorker, _SlotPool
+
+    cfg, params = tiny
+    w0 = ModelWorker("a", cfg, params, max_len=32)
+    assert _SlotPool(w0, 4).cache_shardings is None
+    w1 = ModelWorker("b", cfg, params, max_len=32, ctx=_mesh1_ctx())
+    pool = _SlotPool(w1, 4)
+    assert pool.cache_shardings is not None
+    assert len(jax.tree.leaves(pool.cache_shardings)) == len(
+        jax.tree.leaves(pool.cache))
+    assert w1.shard_report is not None
+
+
+# ---------------------------------------------------------------------------
+# real multi-shard execution (subprocess: flags precede jax import)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_two_shard_serving_tokens_match_unsharded_subprocess():
+    code = (
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=2';"
+        "import jax, numpy as np;"
+        "from repro.configs.base import get_config, reduced;"
+        "from repro.models import init_params;"
+        "from repro.serving.engine import ModelWorker;"
+        "from repro.launch.mesh import make_debug_mesh;"
+        "from repro.sharding.context import ExecContext;"
+        "cfg = reduced(get_config('tinyllama-1.1b'));"
+        "params = init_params(jax.random.PRNGKey(0), cfg);"
+        "prompts = np.arange(1, 25, dtype=np.int32).reshape(2, 12);"
+        "w0 = ModelWorker('u', cfg, params, max_len=24);"
+        "ctx = ExecContext(mesh=make_debug_mesh(1, 2),"
+        " batch_axes=('data',), model_axis='model');"
+        "w1 = ModelWorker('s', cfg, params, max_len=24, ctx=ctx);"
+        "t0 = w0.generate(prompts, 6); t1 = w1.generate(prompts, 6);"
+        "assert np.array_equal(t0, t1), (t0, t1);"
+        "assert w1.shard_report.sharded > 0, w1.shard_report;"
+        "print('SHARD2_OK', w1.shard_report.sharded,"
+        " w1.shard_report.replicated)"
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         env=env, text=True,
+                         cwd=os.path.dirname(os.path.dirname(__file__)),
+                         timeout=570)
+    assert "SHARD2_OK" in out.stdout, out.stderr[-2000:]

@@ -102,6 +102,95 @@ def test_small_mesh_dryrun_subprocess():
     assert "SUBPROC_OK" in out.stdout, out.stderr[-2000:]
 
 
+# ---------------------------------------------------------------------------
+# rule-table pins on a fake multi-way mesh (PartitionSpec math needs only
+# mesh.shape, so divisibility/fallback rules are testable without devices)
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_param_spec_divisible_dims_shard_on_fake_mesh():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.partition_specs import ShardingReport, param_spec
+
+    mesh = _FakeMesh(data=2, model=4)
+    rep = ShardingReport()
+    # 512 % 4 == 0 -> output dim takes the model axis
+    assert param_spec("stages/0/l0/attn/wq", (256, 512), mesh,
+                      fsdp_axes=("data",), report=rep) == P(("data",), "model")
+    assert rep.sharded == 2 and rep.replicated == 0
+    # wo transposes the rule: input dim on model
+    assert param_spec("stages/0/l0/attn/wo", (512, 256), mesh,
+                      report=rep) == P("model", None)
+
+
+def test_param_spec_indivisible_dims_replicate_and_report():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.partition_specs import ShardingReport, param_spec
+
+    mesh = _FakeMesh(data=2, model=4)
+    rep = ShardingReport()
+    # 511 % 4 != 0 -> replicated, never padded; the decision is recorded
+    assert param_spec("stages/0/l0/attn/wq", (256, 511), mesh,
+                      report=rep) == P(None, None)
+    assert rep.replicated == 1
+    assert rep.events == [("stages/0/l0/attn/wq", 1, 511, "model")]
+
+
+def test_fsdp_default_threshold():
+    from types import SimpleNamespace
+
+    from repro.sharding.partition_specs import FSDP_THRESHOLD, fsdp_default
+
+    big = SimpleNamespace(param_count=lambda: FSDP_THRESHOLD / 2 + 1)
+    small = SimpleNamespace(param_count=lambda: FSDP_THRESHOLD / 2 - 1)
+    assert fsdp_default(big) is True  # bf16 bytes = 2 * params
+    assert fsdp_default(small) is False
+
+
+def test_cache_spec_kv_head_fallback_to_sequence():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.partition_specs import ShardingReport, cache_spec
+
+    mesh = _FakeMesh(data=1, model=4)
+    kv = (2, 4, 16, 8, 64)  # (R, B, S, Hkv=8, Dh): heads divide 4-way
+    assert cache_spec("k", kv, mesh, batch_ok=True) == P(
+        None, ("data",), None, "model", None)
+    # kv_heads=2 < TP width 4: KV-sequence shards on 'model' instead
+    # (flash-decode partial softmax), and the fallback is reported
+    rep = ShardingReport()
+    few = (2, 4, 16, 2, 64)
+    assert cache_spec("k", few, mesh, batch_ok=True, report=rep) == P(
+        None, ("data",), "model", None, None)
+    assert rep.replicated == 1 and rep.events[0][2] == 2
+    # pool batch not divisible by batch axes: rows stay local, sequence
+    # takes the data axis
+    assert cache_spec("k", kv, _FakeMesh(data=2, model=4),
+                      batch_ok=False) == P(None, None, "data", "model", None)
+
+
+def test_sharding_report_summary_counts(caplog):
+    import logging
+
+    from repro.sharding.partition_specs import ShardingReport, param_spec
+
+    mesh = _FakeMesh(data=1, model=4)
+    rep = ShardingReport()
+    param_spec("a/wq", (8, 16), mesh, report=rep)
+    param_spec("b/wq", (8, 15), mesh, report=rep)
+    assert (rep.sharded, rep.replicated) == (1, 1)
+    with caplog.at_level(logging.INFO, logger="repro.sharding.partition_specs"):
+        rep.log_summary("test")
+    assert "1 replicated" in caplog.text
+
+
 def test_cache_shardings_rules():
     import jax
 

@@ -319,3 +319,93 @@ def test_engine_legacy_drift_ignores_intervals():
     # though the interval check would have fired
     assert drift_event(eng) is False
     assert eng.ledger.counters.get("interval_repartitions", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# (state bucket, op class) conformal keying
+# ---------------------------------------------------------------------------
+
+
+def test_conformal_per_row_buckets_route_rings():
+    sc = SplitConformal(coverage=0.9, min_scores=24, recalib_every=8)
+    sc.observe(np.full(40, 3.0))  # global ring commits first
+    keys = [(("s",), "matmul"), (("s",), "conv")] * 30
+    scores = np.where(np.arange(60) % 2 == 0, 1.0, 5.0)
+    sc.observe(scores, buckets=keys)
+    # each key got its own ring and calibrates its own quantile
+    assert set(sc._buckets) == {(("s",), "matmul"), (("s",), "conv")}
+    assert sc.quantile((("s",), "matmul")) == pytest.approx(1.0)
+    assert sc.quantile((("s",), "conv")) == pytest.approx(5.0)
+    # a key never observed falls back to the global quantile
+    assert sc.quantile((("s",), "attention")) == sc.quantile()
+
+
+def test_conformal_buckets_length_mismatch_raises():
+    sc = SplitConformal()
+    with pytest.raises(ValueError, match="buckets"):
+        sc.observe(np.zeros(3), buckets=[("a",), ("b",)])
+
+
+def test_observe_batch_op_classes_tallies_and_keys():
+    X, ye, yt = _synthetic(4)
+    m = UncertaintyModel(seed=0).fit(X, ye, yt)
+    Xb = X[:8]
+    ce = np.stack([mm.predict(Xb) for mm in m._e_members]).mean(0)
+    ct = np.stack([mm.predict(Xb) for mm in m._t_members]).mean(0)
+    classes = ["matmul", "conv"] * 4
+    m.observe_batch(Xb, ct, ce, yt[:8], ye[:8], bucket=("hot",),
+                    op_classes=classes)
+    st = m.take_stats()
+    assert st["n"] == 8
+    by = st["by_class"]
+    assert set(by) == {"matmul", "conv"}
+    assert sum(v[0] for v in by.values()) == 8
+    assert sum(v[1] for v in by.values()) == st["covered"]
+    cov = m.coverage_per_class()
+    for c, (cn, cc) in by.items():
+        assert cov[c] == pytest.approx(cc / cn)
+    # residuals were routed to (bucket, class) rings on both calibrators
+    want = {(("hot",), "matmul"), (("hot",), "conv")}
+    assert want <= set(m.conformal_e._buckets)
+    assert want <= set(m.conformal_t._buckets)
+
+
+def test_observe_batch_op_classes_length_mismatch_raises():
+    X, ye, yt = _synthetic(4)
+    m = UncertaintyModel(seed=0).fit(X, ye, yt)
+    c = np.ones(4)
+    with pytest.raises(ValueError, match="op_classes"):
+        m.observe_batch(X[:4], c, c, yt[:4], ye[:4],
+                        op_classes=["matmul"])
+
+
+def test_observe_batch_legacy_path_has_no_class_stats():
+    X, ye, yt = _synthetic(6)
+    m = UncertaintyModel(seed=0).fit(X, ye, yt)
+    Xb = X[:8]
+    ce = np.stack([mm.predict(Xb) for mm in m._e_members]).mean(0)
+    ct = np.stack([mm.predict(Xb) for mm in m._t_members]).mean(0)
+    m.observe_batch(Xb, ct, ce, yt[:8], ye[:8])
+    st = m.take_stats()
+    assert "by_class" not in st and st["n"] == 8
+    assert m.coverage_per_class() == {}
+    # no per-key rings without classes: the single-bucket path is untouched
+    assert m.conformal_e._buckets == {}
+
+
+def test_interval_quantile_keyed_per_row():
+    X, ye, yt = _synthetic(5)
+    m = UncertaintyModel(seed=0).fit(X, ye, yt)
+    # force distinct committed quantiles onto two class rings
+    m.conformal_e._q_buckets[(None, "matmul")] = 1.0
+    m.conformal_e._q_buckets[(None, "conv")] = 4.0
+    Xb = X[:2]
+    ce = np.stack([mm.predict(Xb) for mm in m._e_members]).mean(0)
+    _, hi, sig = m.interval_energy(Xb, ce, op_classes=["matmul", "conv"])
+    np.testing.assert_allclose(hi - np.asarray(ce, np.float64),
+                               [1.0 * sig[0], 4.0 * sig[1]])
+    # a class with no committed ring falls back to the global quantile
+    _, hi_g, sig_g = m.interval_energy(Xb, ce, op_classes=["embed", "embed"])
+    q_g = m.conformal_e.quantile()
+    np.testing.assert_allclose(hi_g - np.asarray(ce, np.float64),
+                               q_g * sig_g)
