@@ -43,6 +43,10 @@ def fleet_regen_cmd(baseline_path: str) -> str:
         # the 1-vs-N shard comparison has its own fixed-config entry point
         return ("PYTHONPATH=src python -m benchmarks.bench_sharded "
                 f"--json {path}")
+    if name == "BENCH_spec.json":
+        # the three-arm speculative decoding comparison
+        return ("PYTHONPATH=src python -m benchmarks.bench_spec "
+                f"--json {path}")
     flag = _FLEET_REGEN_FLAGS.get(name)
     if flag is None and name.startswith("BENCH_fleet_") and name.endswith(".json"):
         scenario = name[len("BENCH_fleet_"):-len(".json")]

@@ -193,6 +193,18 @@ def _run_mode(mode, cfg, params, profiler, reqs, batch_prefill=True):
         "generated_tokens": n_tok,
     }
     if mode == "continuous":
+        # decode-phase tokens (each request's first token comes from
+        # prefill) over target forward passes: per slot step exactly 1.0
+        # for plain decode, >1 only with a speculative draft attached (see
+        # bench_spec); the bucketed path has no per-step ledger events
+        steps = (eng.ledger.select(kind="decode")
+                 + eng.ledger.select(kind="spec_verify"))
+        dec_tokens = n_tok - len(req_events)
+        slot_steps = sum(e.n_active for e in steps)
+        rec["decode_tokens_per_model_step"] = (dec_tokens / len(steps)
+                                               if steps else 0.0)
+        rec["decode_tokens_per_slot_step"] = (dec_tokens / slot_steps
+                                              if slot_steps else 0.0)
         rec["preemptions"] = sum(eng.preemptions.values())
         rec["admission_denials"] = sum(1 for d in eng.admission.log if not d["admit"])
         rec["prefill_batches"] = eng.prefill_batches
@@ -252,6 +264,9 @@ def serving(json_path=None, smoke=False, baseline_path=BASELINE_PATH, emit=print
     cr = modes["continuous"]["energy_rails_j"]
     emit(f"serving_continuous_energy_rails,,cpu_mJ={cr['cpu']*1e3:.3f};"
          f"gpu_mJ={cr['gpu']*1e3:.3f};bus_mJ={cr['bus']*1e3:.3f}")
+    emit(f"serving_decode_tokens_per_step,,"
+         f"model_step={modes['continuous']['decode_tokens_per_model_step']:.2f};"
+         f"slot_step={modes['continuous']['decode_tokens_per_slot_step']:.2f}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)

@@ -58,6 +58,9 @@ SCENARIO_SMOKE = {
                   calib=120),
     "video": dict(devices=1, scenario="video", seed=1, duration=4.0,
                   calib=120),
+    # sustained 12 fps AR segmentation + detector keyframes: the tightest
+    # SLO in the workload family, 2 s is ~25 frames — still smoke-speed
+    "ar": dict(devices=1, scenario="ar", seed=2, duration=2.0, calib=120),
 }
 def scenario_baseline_path(scenario: str) -> str:
     return os.path.join(BASELINE_DIR, f"BENCH_fleet_{scenario}.json")

@@ -1,0 +1,228 @@
+"""Energy-aware speculative decoding benchmark.
+
+``PYTHONPATH=src python -m benchmarks.bench_spec
+    [--json BENCH_spec.json] [--smoke]``
+
+Replays one fixed request set through the continuous engine three times on
+the same virtual timeline, all serving the SAME target params (a 6-layer
+reduced LLM whose layers past the first are residual passthrough — see
+``speculative.truncated_draft``), so every arm must emit identical tokens:
+
+* ``baseline``    — plain decode, ``draft=None`` (the reference column);
+* ``speculative`` — the logits-identical truncated self-draft: every
+  proposal accepted, the EDP rule approves every round (the latency win
+  arm);
+* ``declined``    — a randomly-initialised 1-layer draft whose proposals
+  rarely match: the windowed acceptance estimate collapses until
+  ``AdmissionPolicy.spec_decision`` prices the round's energy premium above
+  its latency win and declines speculation permanently — the pinned trace
+  where speculation is NOT an energy win (``spec_fallbacks``).
+
+Asserted every run: token identity across all three arms, accepted tokens
+per target-model step >= ``MIN_TOKENS_PER_STEP`` on the speculative arm,
+virtual-makespan win over baseline, and at least one ``spec-edp-loses``
+decision on the declined arm. The smoke gate additionally pins the
+deterministic speculation counters and energy/request (with per-rail
+deltas recorded) against ``benchmarks/baselines/BENCH_spec.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baselines", "BENCH_spec.json")
+REGEN_CMD = ("PYTHONPATH=src python -m benchmarks.bench_spec "
+             "--json benchmarks/baselines/BENCH_spec.json")
+
+# 6 layers: deep enough that the 1-layer draft's priced step is cheap
+# relative to the target's, so the EDP rule can approve speculation
+NUM_LAYERS = 6
+N_REQUESTS = 8
+MAX_SLOTS = 4
+MAX_LEN = 96
+SEED = 0
+
+MIN_TOKENS_PER_STEP = 1.4   # accepted tokens per target step (spec arm)
+ENERGY_TOL = 0.25           # relative drift allowed vs committed baseline
+TPS_TOL = 0.15              # relative drift on tokens/target-step
+COUNTER_KEYS = ("spec_rounds", "spec_drafted", "spec_accepted",
+                "spec_fallbacks")
+
+
+def _requests(cfg):
+    r = np.random.RandomState(SEED)
+    return [(i, r.randint(1, cfg.vocab_size,
+                          size=r.randint(4, 12)).astype(np.int32),
+             int(r.randint(12, 28))) for i in range(N_REQUESTS)]
+
+
+def _run_arm(cfg, params, calib_cfgs, draft, emit_label):
+    """One virtual-time replay; fresh sim per arm so every arm starts from
+    the identical device state.  The profiler is calibrated on the SAME
+    graph superset for every arm (``calib_cfgs``): a per-arm graph list
+    would train each GBDT on different samples and price identical target
+    work differently, drowning the speculation signal in calibration noise."""
+    import jax
+
+    from repro.core import (DeviceSim, RuntimeEnergyProfiler,
+                            build_transformer_graph, telemetry)
+    from repro.serving.engine import AdaOperScheduler, Request, ServingEngine
+
+    del jax  # imported for side effects parity with the other benches
+    prof = RuntimeEnergyProfiler(use_gru=False, seed=SEED)
+    prof.offline_calibrate([build_transformer_graph(c, 2, 32)
+                            for c in calib_cfgs],
+                           n_samples=600, seed=SEED)
+    eng = ServingEngine(scheduler=AdaOperScheduler(prof, DeviceSim(
+        "moderate", seed=SEED)), max_slots=MAX_SLOTS)
+    eng.add_model("m", cfg, params, max_len=MAX_LEN, draft=draft)
+    arrivals = [(0.0, "m", Request(uid, prompt, max_new))
+                for uid, prompt, max_new in _requests(cfg)]
+    responses = eng.run_trace(arrivals)
+    tokens = {r.uid: np.asarray(r.tokens).tolist() for r in responses}
+    req_events = eng.ledger.requests()
+    rails = telemetry.fold_energy(req_events)
+    c = eng.ledger.counters
+    dec = eng.ledger.select(kind="decode")
+    ver = eng.ledger.select(kind="spec_verify")
+    # decode-phase committed tokens (each request's first token comes from
+    # prefill) over target forward passes: whole-pool steps and, slot-
+    # weighted, per-slot steps — the speculation win is tokens per *slot*
+    # step > 1 (plain decode is exactly 1)
+    dec_tokens = sum(len(t) for t in tokens.values()) - len(responses)
+    slot_steps = sum(e.n_active for e in dec) + sum(e.n_active for e in ver)
+    rec = {
+        "makespan_s": max(e.t_s + e.latency_s for e in req_events),
+        "mean_latency_s": float(np.mean([r.latency_s for r in responses])),
+        "energy_per_request_j": float(np.mean([ev.energy.total_j
+                                               for ev in req_events])),
+        "energy_rails_j": rails.rails_dict(),
+        "n_requests": len(responses),
+        "generated_tokens": int(sum(len(t) for t in tokens.values())),
+        "tokens_per_target_step": (dec_tokens / slot_steps
+                                   if slot_steps else 0.0),
+        "counters": {k: c[k] for k in COUNTER_KEYS if c.get(k)},
+        "spec_decisions": {r: sum(1 for d in eng.admission.spec_log
+                                  if d["reason"] == r)
+                           for r in {d["reason"]
+                                     for d in eng.admission.spec_log}},
+    }
+    return rec, tokens, emit_label
+
+
+def run(json_path=None, smoke=False, baseline_path=BASELINE_PATH, emit=print):
+    import jax
+
+    from repro.configs.base import get_config, reduced
+    from repro.models import init_params
+    from repro.serving.speculative import truncated_draft
+
+    cfg = dataclasses.replace(reduced(get_config("tinyllama-1.1b")),
+                              num_layers=NUM_LAYERS)
+    params = init_params(jax.random.PRNGKey(SEED), cfg)
+    dcfg, dparams, tparams = truncated_draft(cfg, params)
+    rcfg = dataclasses.replace(cfg, name=f"{cfg.name}-rdraft", num_layers=1)
+    rparams = init_params(jax.random.PRNGKey(SEED + 9), rcfg)
+
+    calib_cfgs = (cfg, dcfg, rcfg)   # one graph superset for every arm
+    arms, tokens = {}, {}
+    for name, draft in (("baseline", None),
+                        ("speculative", (dcfg, dparams)),
+                        ("declined", (rcfg, rparams))):
+        arms[name], tokens[name], _ = _run_arm(cfg, tparams, calib_cfgs,
+                                               draft, name)
+
+    base, spec, dec = arms["baseline"], arms["speculative"], arms["declined"]
+    speedup = base["makespan_s"] / spec["makespan_s"]
+    energy_ratio = (spec["energy_per_request_j"]
+                    / base["energy_per_request_j"])
+    rail_delta = {r: spec["energy_rails_j"][r] - base["energy_rails_j"][r]
+                  for r in base["energy_rails_j"]}
+    out = {
+        "smoke": smoke,
+        "workload": {"num_layers": NUM_LAYERS, "n_requests": N_REQUESTS,
+                     "max_slots": MAX_SLOTS, "seed": SEED},
+        "arms": arms,
+        "tokens_identical": (tokens["speculative"] == tokens["baseline"]
+                             and tokens["declined"] == tokens["baseline"]),
+        "makespan_speedup": speedup,
+        "energy_per_req_ratio": energy_ratio,
+        "energy_rails_delta_j": rail_delta,
+    }
+    for name, rec in arms.items():
+        emit(f"spec_{name},,makespan_ms={rec['makespan_s']*1e3:.3f};"
+             f"energy_mJ_per_req={rec['energy_per_request_j']*1e3:.3f};"
+             f"tokens_per_target_step={rec['tokens_per_target_step']:.2f};"
+             f"counters={rec['counters']}")
+    emit(f"spec_vs_baseline,,makespan_speedup={speedup:.3f};"
+         f"energy_ratio={energy_ratio:.3f};"
+         f"tokens_identical={out['tokens_identical']};"
+         + ";".join(f"{r}_delta_mJ={d*1e3:.3f}"
+                    for r, d in sorted(rail_delta.items())))
+    emit(f"spec_declined_arm,,fallbacks={dec['counters'].get('spec_fallbacks', 0)};"
+         f"decisions={dec['spec_decisions']}")
+
+    # asserted every run: the correctness and economics headlines
+    assert out["tokens_identical"], \
+        "speculative decode diverged from the plain-decode tokens"
+    tps = spec["tokens_per_target_step"]
+    assert tps >= MIN_TOKENS_PER_STEP, \
+        (f"speculative arm committed {tps:.2f} tokens per target step "
+         f"(< {MIN_TOKENS_PER_STEP})")
+    assert speedup > 1.0, \
+        f"speculation lost virtual makespan: {speedup:.3f}x"
+    assert dec["counters"].get("spec_fallbacks", 0) > 0, \
+        "declined arm never fell back — spec_decision approved every round"
+    assert dec["spec_decisions"].get("spec-edp-loses", 0) > 0, \
+        "declined arm has no spec-edp-loses decision on record"
+
+    if json_path:
+        with open(json_path, "w") as fp:
+            json.dump(out, fp, indent=2, sort_keys=True)
+    if smoke:
+        from benchmarks.baseline_gate import load_baseline
+        b = load_baseline(baseline_path, REGEN_CMD)
+        failures = []
+        for name in ("baseline", "speculative", "declined"):
+            cur, ref = arms[name], b["arms"][name]
+            if cur["counters"] != ref["counters"]:
+                failures.append(
+                    f"{name} speculation counters diverged: "
+                    f"{cur['counters']} vs baseline {ref['counters']}")
+            e_cur, e_ref = (cur["energy_per_request_j"],
+                            ref["energy_per_request_j"])
+            if abs(e_cur - e_ref) > ENERGY_TOL * e_ref:
+                failures.append(
+                    f"{name} energy/request drifted >{ENERGY_TOL:.0%}: "
+                    f"{e_cur:.4e} J vs baseline {e_ref:.4e} J")
+        t_ref = b["arms"]["speculative"]["tokens_per_target_step"]
+        if abs(tps - t_ref) > TPS_TOL * t_ref:
+            failures.append(
+                f"speculative tokens/target-step drifted >{TPS_TOL:.0%}: "
+                f"{tps:.3f} vs baseline {t_ref:.3f}")
+        if failures:
+            lines = "\n".join(f"  - {f}" for f in failures)
+            raise AssertionError(
+                f"spec: {len(failures)} gate failure(s) vs {baseline_path}\n"
+                f"{lines}\nIf the change is intentional, regenerate with:\n"
+                f"    {REGEN_CMD}")
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_spec.json",
+                    help="output JSON path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate against the committed baseline")
+    args = ap.parse_args(argv)
+    return run(json_path=args.json, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

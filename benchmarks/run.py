@@ -29,7 +29,7 @@ import os
 import time
 
 SMOKE_SECTIONS = ("profiler", "partitioner", "concurrent", "coexec", "fleet",
-                  "uncertainty", "sharded")
+                  "uncertainty", "sharded", "spec")
 
 
 def main(argv=None) -> None:
@@ -37,7 +37,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated sections (fig2,concurrent,coexec,"
                          "profiler,partitioner,kernels,roofline,fleet,"
-                         "uncertainty,sharded)")
+                         "uncertainty,sharded,spec)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced fast-section run with loud fast-path asserts")
     ap.add_argument("--json-dir", default=".",
@@ -54,7 +54,7 @@ def main(argv=None) -> None:
     else:
         sections = set((args.only or
                         "fig2,concurrent,coexec,profiler,partitioner,"
-                        "kernels,roofline,fleet,uncertainty,sharded")
+                        "kernels,roofline,fleet,uncertainty,sharded,spec")
                        .split(","))
     t0 = time.time()
 
@@ -119,6 +119,10 @@ def main(argv=None) -> None:
         from benchmarks import bench_sharded
         bench_sharded.smoke_run(json_path=jp("BENCH_sharded.json"),
                                 smoke=args.smoke)
+    if "spec" in sections:
+        banner("Speculative decoding: draft/verify vs plain decode (3 arms)")
+        from benchmarks import bench_spec
+        bench_spec.run(json_path=jp("BENCH_spec.json"), smoke=args.smoke)
     if "kernels" in sections:
         banner("Pallas kernels (interpret-mode regression)")
         from benchmarks import bench_kernels

@@ -48,6 +48,11 @@ _ROBUST_COUNTER_KEYS = ("faults", "recoveries", "fault_replans", "op_retries",
                         "deadline_misses", "deadline_evictions",
                         "battery_dead")
 
+# speculative-decoding counters (repro.serving.speculative), surfaced only
+# when nonzero: replays without a draft keep the report schema byte-for-byte
+_SPEC_COUNTER_KEYS = ("spec_rounds", "spec_drafted", "spec_accepted",
+                      "spec_fallbacks")
+
 # uncertainty counters (repro.uncertainty), surfaced only when nonzero like
 # the robustness set: runs without an attached uncertainty model keep the
 # pre-uncertainty report schema byte-for-byte; the per-op-class pairs come
@@ -106,7 +111,8 @@ class DeviceReplay:
                  serving_models: Optional[Dict[str, tuple]] = None,
                  max_slots: int = 4, fault_plan: Optional[FaultPlan] = None,
                  joint: bool = False, uncertainty: bool = False,
-                 risk_level: Optional[float] = None, serving_ctx=None):
+                 risk_level: Optional[float] = None, serving_ctx=None,
+                 serving_drafts: Optional[Dict[str, tuple]] = None):
         if backend not in ("graph", "serving"):
             raise ValueError(f"unknown replay backend {backend!r}; choose "
                              "from ('graph', 'serving')")
@@ -154,12 +160,17 @@ class DeviceReplay:
             # mesh) applied to every worker — replayed fleets then price
             # tensor-parallel collectives through the same comm term as
             # the live engine; None keeps the single-device default
+            # serving_drafts: model name -> (draft_cfg, draft_params) turns
+            # on energy-aware speculative decoding for that worker
+            # (repro.serving.speculative); absent names keep plain decode
             for name, (cfg, params) in (serving_models or {}).items():
+                kw = {}
                 if serving_ctx is not None:
-                    self.engine.add_model(name, cfg, params, max_len=64,
-                                          ctx=serving_ctx)
-                else:
-                    self.engine.add_model(name, cfg, params, max_len=64)
+                    kw["ctx"] = serving_ctx
+                draft = (serving_drafts or {}).get(name)
+                if draft is not None:
+                    kw["draft"] = draft
+                self.engine.add_model(name, cfg, params, max_len=64, **kw)
 
     def _set_resident_graphs(self, trace: Trace) -> None:
         """Declare the trace's distinct graph-path models as the
@@ -288,6 +299,8 @@ class DeviceReplay:
                "admission_denials": c.get("admission_denials", 0),
                "rejected": c.get("rejected", 0)}
         out.update(self._robust_counters(c))
+        # speculative decoding (only-when-nonzero, like the robustness set)
+        out.update({k: c[k] for k in _SPEC_COUNTER_KEYS if c.get(k)})
         out.update(self._uncertainty_counters(c))
         return out
 
@@ -392,7 +405,8 @@ class FleetReplay:
                  serving_models: Optional[Dict[str, tuple]] = None,
                  rate_scale: float = 1.0, max_slots: int = 4,
                  joint: bool = False, uncertainty: bool = False,
-                 risk_level: Optional[float] = None, serving_ctx=None):
+                 risk_level: Optional[float] = None, serving_ctx=None,
+                 serving_drafts: Optional[Dict[str, tuple]] = None):
         self.population = population
         self.scenario = scenario
         self.duration_s = duration_s
@@ -414,6 +428,8 @@ class FleetReplay:
         # shared ExecContext for every device's serving workers (sharded
         # fleet replays); None keeps the single-device default
         self.serving_ctx = serving_ctx
+        # per-model speculative-decoding drafts for every device's engine
+        self.serving_drafts = serving_drafts
 
     def device_trace(self, idx: int) -> Trace:
         return make_trace(self.scenario, self.duration_s,
@@ -441,7 +457,8 @@ class FleetReplay:
                               max_slots=self.max_slots, joint=self.joint,
                               uncertainty=self.uncertainty,
                               risk_level=self.risk_level,
-                              serving_ctx=self.serving_ctx)
+                              serving_ctx=self.serving_ctx,
+                              serving_drafts=self.serving_drafts)
             records, counters = dr.run(trace)
             devices.append(dr.metrics(records, counters))
             all_latencies.extend(r.latency_s for r in records)

@@ -215,9 +215,26 @@ def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, window=None, impl="xla"):
     serving path) or a (B,) vector of per-sequence write positions (the
     ragged continuous-batching path, where every cache slot sits at its own
     depth). The vector path scatters each row's K/V at its own position and
-    masks attention per row with kv_len = pos+1."""
-    B = x.shape[0]
+    masks attention per row with kv_len = pos+1.
+
+    Speculative verify (vector ``pos`` with T = x.shape[1] > 1): each row
+    scores T candidate positions pos..pos+T-1 in one forward — K/V scatter
+    at the (B,T) position grid (out-of-range writes drop), causal masking
+    among the new queries. Stale cache entries past a row's committed
+    frontier (rejected draft suffixes from an earlier round) sit at
+    kpos > qpos, so the causal mask hides them until they are overwritten —
+    rollback is free."""
+    B, T = x.shape[0], x.shape[1]
     pos = jnp.asarray(pos)
+    if pos.ndim and T > 1:  # ragged multi-position verify
+        positions = pos[:, None] + jnp.arange(T)  # (B,T)
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        bidx = jnp.arange(B)[:, None]
+        cache_k = cache_k.at[bidx, positions].set(k.astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[bidx, positions].set(v.astype(cache_v.dtype), mode="drop")
+        o = attend(q, cache_k, cache_v, causal=True, window=window,
+                   softcap=cfg.attn_softcap, q_offset=pos, kv_len=None, impl=impl)
+        return o.reshape(B, T, cfg.q_dim) @ p["wo"], (cache_k, cache_v)
     positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
     q, k, v = _project_qkv(p, x, cfg, positions)
     if pos.ndim:  # ragged: per-slot positions
@@ -311,30 +328,42 @@ def mla_forward(p, x, cfg, impl="xla"):
 
 def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, impl="xla"):
     """Absorbed decode: scores & values live in the kv_lora latent space.
-    ``pos`` scalar or (B,) per-slot positions (see ``gqa_decode``)."""
-    B = x.shape[0]
+    ``pos`` scalar or (B,) per-slot positions (see ``gqa_decode``); a (B,)
+    ``pos`` with T = x.shape[1] > 1 is the speculative multi-position verify
+    — latents scatter at the (B,T) grid and the new queries attend causally
+    (stale rejected-suffix latents are causal-masked until overwritten)."""
+    B, T = x.shape[0], x.shape[1]
     H, nope, vd, lr = cfg.num_heads, cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
     pos = jnp.asarray(pos)
-    positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
-    c_kv, k_rope = _mla_compress(p, x, cfg, positions)
-    if pos.ndim:  # ragged: per-slot positions
-        bidx = jnp.arange(B)
-        cache_ckv = cache_ckv.at[bidx, pos].set(c_kv[:, 0].astype(cache_ckv.dtype), mode="drop")
-        cache_krope = cache_krope.at[bidx, pos].set(k_rope[:, 0].astype(cache_krope.dtype), mode="drop")
-        idx = pos
+    if pos.ndim and T > 1:  # ragged multi-position verify
+        positions = pos[:, None] + jnp.arange(T)  # (B,T)
+        causal, kv_len, idx = True, None, pos
+        bidx = jnp.arange(B)[:, None]
+        c_kv, k_rope = _mla_compress(p, x, cfg, positions)
+        cache_ckv = cache_ckv.at[bidx, positions].set(c_kv.astype(cache_ckv.dtype), mode="drop")
+        cache_krope = cache_krope.at[bidx, positions].set(k_rope.astype(cache_krope.dtype), mode="drop")
     else:
-        idx = pos.reshape(())
-        cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_kv.astype(cache_ckv.dtype), idx, axis=1)
-        cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, k_rope.astype(cache_krope.dtype), idx, axis=1)
+        causal, positions = False, jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
+        c_kv, k_rope = _mla_compress(p, x, cfg, positions)
+        if pos.ndim:  # ragged: per-slot positions
+            bidx = jnp.arange(B)
+            cache_ckv = cache_ckv.at[bidx, pos].set(c_kv[:, 0].astype(cache_ckv.dtype), mode="drop")
+            cache_krope = cache_krope.at[bidx, pos].set(k_rope[:, 0].astype(cache_krope.dtype), mode="drop")
+            idx = pos
+        else:
+            idx = pos.reshape(())
+            cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_kv.astype(cache_ckv.dtype), idx, axis=1)
+            cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, k_rope.astype(cache_krope.dtype), idx, axis=1)
+        kv_len = idx + 1
     q_nope, q_rope = _mla_queries(p, x, cfg, positions)
     w_uk = p["w_ukv"][..., :nope]  # (lr, H, nope)
-    # absorb: q' = q_nope @ W_uk^T  -> latent-space queries (B,1,H,lr)
+    # absorb: q' = q_nope @ W_uk^T  -> latent-space queries (B,T,H,lr)
     q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)).astype(x.dtype)
-    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,1,H,lr+rope)
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,T,H,lr+rope)
     k_eff = jnp.concatenate([cache_ckv, cache_krope], axis=-1)[:, :, None, :]  # 1 kv head
     v_eff = cache_ckv[:, :, None, :]  # (B,Smax,1,lr)
-    o_lat = attend(q_eff, k_eff, v_eff, causal=False, q_offset=idx, kv_len=idx + 1,
-                   scale=_mla_scale(cfg), impl=impl)  # (B,1,H,lr)
+    o_lat = attend(q_eff, k_eff, v_eff, causal=causal, q_offset=idx, kv_len=kv_len,
+                   scale=_mla_scale(cfg), impl=impl)  # (B,T,H,lr)
     w_uv = p["w_ukv"][..., nope:]  # (lr, H, vd)
     o = jnp.einsum("bqhr,rhd->bqhd", o_lat.astype(jnp.float32), w_uv.astype(jnp.float32)).astype(x.dtype)
-    return o.reshape(B, 1, H * vd) @ p["wo"], (cache_ckv, cache_krope)
+    return o.reshape(B, T, H * vd) @ p["wo"], (cache_ckv, cache_krope)

@@ -162,6 +162,15 @@ def apply_layer(lp, x, cfg, kind, mlp_kind, ctx, mode, cache, pos,
         fwd = ssm.mamba2_forward if kind == "ssd" else ssm.mamba1_forward
         step = ssm.mamba2_decode if kind == "ssd" else ssm.mamba1_decode
         if mode == "decode":
+            if h.shape[1] != 1:
+                # recurrent state advances one token at a time; there is no
+                # KV cache to roll a rejected suffix back from, so the
+                # speculative multi-position verify cannot run through SSM
+                # mixers (repro.serving.speculative gates drafts to
+                # pure-attention decoder stacks for the same reason)
+                raise ValueError(
+                    f"SSM decode is single-token; got {h.shape[1]} positions "
+                    f"for layer kind {kind!r}")
             mix, (conv_s, ssm_s) = step(lp["mixer"], h, cfg, cache["conv"], cache["ssm"])
             new_cache.update(conv=conv_s, ssm=ssm_s)
         else:

@@ -2,14 +2,19 @@
 
 Modules: ``slots`` (cache-row pool state), ``sampling`` (per-request RNG
 streams), ``workers`` (ModelWorker), ``admission`` (AdmissionPolicy +
-batched prefill), ``scheduler`` (AdaOperScheduler), ``engine``
-(ServingEngine orchestration). ``repro.serving.engine`` re-exports every
-pre-refactor public name. See ``docs/architecture.md`` and
-``docs/serving.md``.
+batched prefill), ``scheduler`` (AdaOperScheduler), ``decoding`` (one
+decode iteration), ``speculative`` (draft/verify speculative decoding),
+``engine`` (ServingEngine orchestration). ``repro.serving.engine``
+re-exports every pre-refactor public name. See ``docs/architecture.md``
+and ``docs/serving.md``.
 """
 from repro.serving.admission import AdmissionPolicy  # noqa: F401
 from repro.serving.engine import ServingEngine  # noqa: F401
 from repro.serving.scheduler import AdaOperScheduler  # noqa: F401
+from repro.serving.speculative import (  # noqa: F401
+    SpecConfig,
+    truncated_draft,
+)
 from repro.serving.slots import (  # noqa: F401
     Request,
     Response,

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.telemetry import EnergyBreakdown
+from repro.serving import planning
 from repro.serving.robustness import reject_request
 from repro.serving.scheduler import AdaOperScheduler
 from repro.serving.slots import Request, Response, _ActiveSeq, _SlotPool
@@ -43,6 +44,9 @@ class AdmissionPolicy:
         # without a stamped interval fall back to the point value too.
         self.risk_level = risk_level
         self.log: List[dict] = []
+        # speculation pricing decisions (repro.serving.speculative) — kept
+        # apart from the admission log so denial counts stay request-scoped
+        self.spec_log: List[dict] = []
         # engine-attached ledger: denials are counted at the source so
         # fleet counters fold from telemetry, not from re-scanning the log
         self.ledger = None
@@ -95,6 +99,32 @@ class AdmissionPolicy:
                          "n_active": n_active, "uid": uid})
         if self.ledger is not None and not admit:
             self.ledger.count("admission_denials")
+
+    def spec_decision(self, base: dict, draft: dict, k: int,
+                      alpha: float) -> Tuple[bool, str]:
+        """Price one speculative round against the plain step it replaces:
+        speculate only when the per-token EDP of the round (k draft steps +
+        one k+1-position verify, divided by the expected committed tokens)
+        beats the base step's per-token EDP.
+        Both sides are priced at the configured ``risk_level`` quantile —
+        the same interval arithmetic as admission, so an uncertain plan
+        declines speculation more conservatively than a confident one. The
+        energy premium is the AdaOper tension: verify latency amortises
+        across positions but verify energy does not
+        (``planning.SPEC_VERIFY_MARGINAL_*``), so a latency win can still
+        lose on EDP — those rounds fall back to the plain step and count
+        ``spec_fallbacks``."""
+        if self.scheduler is None:
+            return True, "no-scheduler"
+        lat_b, en_b = self._risk(base, "latency"), self._risk(base, "energy")
+        lat_d, en_d = self._risk(draft, "latency"), self._risk(draft, "energy")
+        lat_s, en_s = planning.spec_round_cost(lat_b, en_b, lat_d, en_d, k)
+        tau = planning.expected_tokens(alpha, k)
+        edp_spec = (lat_s / tau) * (en_s / (tau * base["batch"]))
+        edp_base = lat_b * (en_b / base["batch"])
+        if edp_spec <= edp_base * self.edp_slack:
+            return True, "spec-edp-wins"
+        return False, "spec-edp-loses"
 
 
 def ssm_prompt_bucketed(eng, w: ModelWorker) -> bool:
@@ -244,6 +274,14 @@ def prefill_group(eng, model: str, pool: _SlotPool,
         # virtual replay charges the whole bucket at the planner's
         # predicted latency (wall-clock mode measures it)
         eng._advance_vtime(pp["latency"])
+    spec = getattr(eng, "spec", {}).get(model)
+    if spec is not None:
+        # warm the draft cache for the admitted group (same prompts, the
+        # draft's own params) so verify rounds only catch up 1-2 tokens;
+        # charged as a spec_draft event with the draft plan's rails
+        from repro.serving import speculative
+        speculative.prefill_draft(eng, model, spec, group, prompts, slots, G,
+                                  plan_len)
     for seq, tok in zip(group, toks):
         seq.tokens.append(tok)
         if pp is not None:

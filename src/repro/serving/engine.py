@@ -4,7 +4,8 @@ The paper's setting is several DNN tasks sharing one device; here several
 models share the engine. This module is the *orchestrator* of the
 ``repro.serving`` package — the machinery lives in focused submodules
 (``slots``, ``sampling``, ``workers``, ``admission``, ``scheduler``,
-``bucketed``, ``planning``; see ``docs/architecture.md``) and is
+``bucketed``, ``planning``, ``decoding``, ``speculative``; see
+``docs/architecture.md``) and is
 re-exported here so pre-refactor import paths
 (``from repro.serving.engine import ...``) keep working
 (``tests/test_serving_imports.py``).
@@ -27,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.telemetry import EnergyBreakdown, EnergyLedger
-from repro.serving import admission as adm, planning, robustness, sampling
+from repro.serving import (admission as adm, decoding, planning, robustness,
+                           sampling, speculative)
 from repro.serving.admission import AdmissionPolicy  # noqa: F401  (re-export)
 from repro.serving.bucketed import step_bucketed
 from repro.serving.sampling import _sample_rows  # noqa: F401  (re-export)
@@ -82,6 +84,9 @@ class ServingEngine:
         self.legacy_drift = legacy_drift
         self.ssm_prompt_buckets = ssm_prompt_buckets
         self.pools: Dict[str, _SlotPool] = {}
+        # speculative decoding state per target model (repro.serving
+        # .speculative); empty unless add_model was given a draft
+        self.spec: Dict[str, speculative.SpecState] = {}
         self.priorities: Dict[str, int] = {}
         self.preemptions: Dict[str, int] = {}
         self.drift_events = 0
@@ -136,13 +141,20 @@ class ServingEngine:
     # ---- registration + bucketed reference path ----
 
     def add_model(self, name, cfg, params, max_len=512, ctx=ExecContext(),
-                  priority: int = 0, max_enc_len: Optional[int] = None):
+                  priority: int = 0, max_enc_len: Optional[int] = None,
+                  draft=None, spec=None):
+        """``draft=(draft_cfg, draft_params)`` attaches a speculative-
+        decoding draft worker to this model (continuous mode; ``spec`` is an
+        optional ``SpecConfig``); the default ``draft=None`` keeps every
+        decode bit-identical to the pre-speculation engine."""
         self.workers[name] = ModelWorker(name, cfg, params, max_len, ctx,
                                          max_enc_len=max_enc_len)
         self.queues[name] = []
         self.stats[name] = []
         self.priorities[name] = priority
         self.preemptions[name] = 0
+        if draft is not None:
+            self.spec[name] = speculative.attach_draft(self, name, draft, spec)
 
     def submit(self, model: str, req: Request):
         if req.t_submit == 0.0:
@@ -219,7 +231,6 @@ class ServingEngine:
         ``check_drift=False`` is for drivers that already ran the per-round
         drift check; ``temperature > 0`` samples each slot from its own
         seed-derived stream."""
-        w = self.workers[model]
         if check_drift and self.scheduler is not None:
             self._drift_event()  # direct drivers still invalidate stale plans
         pool = self._pool(model)
@@ -232,45 +243,10 @@ class ServingEngine:
         t0 = self._now()
         n_admitted = self._admit(model, pool, out, temperature)
         if decode and pool.active:
-            enc_len = pool.enc_len if w.cfg.is_encoder_decoder else None
-            next_tok, logits, pool.cache = w.decode_pool(pool.cache, pool.tokens,
-                                                         pool.pos, enc_len=enc_len)
-            n_active = len(pool.active)
-            step_energy = 0.0
-            if self.scheduler is not None:
-                seq_len, max_new = self._plan_shape(pool)
-                sp = self._plan_for(model, n_active, seq_len, max_new)
-                step_energy = sp["step_energy"]
-                self.scheduler.sim.step(sp["step_latency"])
-                # drain exactly what the resident requests are charged
-                # (step_energy/batch each), so battery drain and summed
-                # per-request energy stay consistent in the fleet report
-                self.scheduler.sim.drain(step_energy * n_active / sp["batch"])
-                self.ledger.emit(
-                    "decode", sp["step_latency"],
-                    EnergyBreakdown.from_total(
-                        step_energy * n_active / sp["batch"], sp["rails"]),
-                    t_s=t0, model=model, n_active=n_active)
-                self._advance_vtime(sp["step_latency"])
-            seqs = list(pool.active.values())
-            if temperature > 0.0:
-                # gather active rows on device: the host only ever sees the
-                # sampled tokens, not the whole (max_slots, V) logits
-                rows = logits[jnp.asarray([seq.slot for seq in seqs])]
-                toks = self._sample_batch(model, seqs, rows, temperature)
-            else:
-                toks = [int(next_tok[seq.slot]) for seq in seqs]
-            for seq, tok in zip(seqs, toks):
-                seq.tokens.append(tok)
-                seq.pos += 1
-                if self.scheduler is not None:
-                    # energy of the (bucketed-batch) step plan, shared per slot
-                    seq.rails += EnergyBreakdown.from_total(
-                        step_energy / sp["batch"], sp["rails"])
-                pool.tokens[seq.slot, 0] = tok
-                pool.pos[seq.slot] = seq.pos
-                if len(seq.tokens) >= seq.req.max_new_tokens:
-                    self._retire(pool, seq, out)
+            # one decode iteration: speculative draft-verify round for
+            # models with a draft attached, the plain ragged step otherwise
+            # (machinery in repro.serving.decoding / .speculative)
+            decoding.decode_round(self, model, pool, out, temperature, t0)
         if n_admitted or pool.active or out:
             self.stats[model].append({
                 "mode": "continuous", "active": len(pool.active),

@@ -28,6 +28,35 @@ def _sample_rows(keys, idx, logits):
     return jax.vmap(draw)(keys, idx, logits)
 
 
+def _sample_grid(keys, idx0, logits):
+    """Batched multi-position draw for the speculative verify path: token
+    ``idx0[b] + t`` of stream ``keys[b]`` from ``logits[b, t]`` for every
+    position t. The nested vmap runs the exact fold_in + categorical of
+    ``_sample_rows``/``sample_one`` per (row, position), so the draw for
+    token index i is bit-identical whether that token arrives alone
+    (sequential decode) or inside an accepted run of k (a verify round) —
+    the stream depends only on (key, token index), never on arrival
+    pattern."""
+    T = logits.shape[1]
+
+    def row(k, i0, rows):
+        def one(t, r):
+            return jax.random.categorical(jax.random.fold_in(k, i0 + t), r)
+        return jax.vmap(one)(jnp.arange(T, dtype=jnp.uint32), rows)
+
+    return jax.vmap(row)(keys, idx0, logits)
+
+
+def sample_grid(seqs: List, logits, temperature: float):
+    """(B, T) tokens for the verify grid: position t of row b is token
+    #(len(seq.tokens) + t) of that seq's stream — the batched counterpart of
+    T sequential ``sample_one`` calls. ``logits`` (B, T, V)."""
+    keys = jnp.stack([seq.rng for seq in seqs])
+    idx0 = jnp.asarray([len(seq.tokens) for seq in seqs], jnp.uint32)
+    toks = _sample_grid(keys, idx0, jnp.asarray(logits) / temperature)
+    return np.asarray(toks, np.int64)
+
+
 def stream_key(sampling_seed: int, model: str, uid) -> jax.Array:
     """Per-request sampling stream: seed ⊕ model ⊕ uid. Independent of
     admission order, slot placement and co-resident requests."""

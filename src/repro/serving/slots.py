@@ -94,6 +94,13 @@ class _ActiveSeq:
     # token i draws from fold_in(rng, i), so sampled decode is reproducible
     # under ANY admission order / slot placement / co-resident set
     rng: Optional[jax.Array] = None
+    # speculative decode (repro.serving.speculative; inert without a draft):
+    # draft_pos is the draft cache's frontier — the next position the draft
+    # worker writes (== how much of the committed sequence it has consumed);
+    # spec_hist is the sliding (accepted, offered) window behind the
+    # per-slot adaptive k
+    draft_pos: int = 0
+    spec_hist: List = field(default_factory=list)
 
     @property
     def energy_j(self) -> float:

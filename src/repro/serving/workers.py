@@ -60,6 +60,7 @@ class ModelWorker:
             self.param_shardings = None
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._verify = jax.jit(self._verify_impl, donate_argnums=(1,))
         self._write = jax.jit(model_lib.write_cache_slot, donate_argnums=(0,))
         self._write_many = jax.jit(model_lib.write_cache_slots,
                                    donate_argnums=(0,))
@@ -95,6 +96,13 @@ class ModelWorker:
         logits, cache = model_lib.decode_step(params, self.cfg, token, cache,
                                               pos, self.ctx, enc_len=enc_len)
         return logits[:, -1], cache
+
+    def _verify_impl(self, params, cache, tokens, pos):
+        # multi-position decode (speculative verify / draft catch-up): keep
+        # the full (B, T, V) logits — every position's distribution feeds the
+        # acceptance rule, not just the last one
+        return model_lib.decode_step(params, self.cfg, tokens, cache,
+                                     pos, self.ctx)
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  enc_inputs=None, temperature: float = 0.0, seed: int = 0,
@@ -210,5 +218,19 @@ class ModelWorker:
             self.params, pool_cache, jnp.asarray(tokens),
             jnp.asarray(pos, dtype=jnp.int32),
             None if enc_len is None else jnp.asarray(enc_len, dtype=jnp.int32))
+        return (np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)),
+                logits, pool_cache)
+
+    def decode_verify(self, pool_cache, tokens: np.ndarray, pos: np.ndarray):
+        """Multi-position ragged decode over the slot pool — the speculative
+        verify / draft catch-up primitive. ``tokens`` (max_slots, T) int32
+        feed positions pos..pos+T-1 per row against the cache (out-of-range
+        writes drop; garbage rows beyond a slot's frontier are causal-masked,
+        see ``gqa_decode``). Returns (greedy tokens (max_slots, T) np.int32,
+        logits (max_slots, T, V), cache). T==1 is NOT routed here — the
+        single-token path keeps its own jitted shape (``decode_pool``)."""
+        logits, pool_cache = self._verify(
+            self.params, pool_cache, jnp.asarray(tokens),
+            jnp.asarray(pos, dtype=jnp.int32))
         return (np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)),
                 logits, pool_cache)
